@@ -1,0 +1,73 @@
+"""Measured PIM-engine performance (the §Perf hillclimb that runs for real
+on this container).
+
+Separates compile from steady-state: builds the jitted while-loop once,
+executes twice, reports the second run.  KIPS = simulated instructions /
+wall-second (paper's PIMulator: 3 KIPS, single DPU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.workloads as wl
+from repro.core import engine
+from repro.core.config import DPUConfig
+
+
+def steady_state(name: str, scale: float, n_threads: int = 16, **cfg_kw):
+    """Returns dict(compile_s, run_s, cycles, issued, kips, cps)."""
+    cfg = DPUConfig(n_tasklets=max(n_threads, 16), mram_bytes=1 << 21,
+                    **cfg_kw)
+    W = wl.get(name)
+    hd = W.host_data(cfg, scale, 0)
+    prog = W.build(n_threads)
+    binary = prog.binary(cfg.iram_instrs)
+    wram = np.zeros((cfg.n_dpus, 16), np.int32)
+    wram[:, :hd.args.shape[1]] = hd.args
+    step, cond = engine.make_step(cfg, binary)
+
+    @jax.jit
+    def go(st):
+        return jax.lax.while_loop(cond, step, st)
+
+    st0 = engine.make_state(cfg, binary, wram, hd.mram, n_threads)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(go(st0))
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(go(st0))
+    t_run = time.perf_counter() - t0
+    cycles = int(np.asarray(out["cycle"]).max())
+    issued = int(np.asarray(out["c_issued"]).sum())
+    return {
+        "workload": name, "dpus": cfg.n_dpus, "threads": n_threads,
+        "compile_s": round(t_first - t_run, 2), "run_s": round(t_run, 3),
+        "cycles": cycles, "issued": issued,
+        "kips": round(issued / t_run / 1e3, 1),
+        "cycles_per_s": int(cycles / t_run),
+    }
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.3)
+    args = ap.parse_args()
+    print("== steady-state engine throughput ==")
+    rows = []
+    for d in (1, 4, 16, 64):
+        r = steady_state("VA", args.scale, n_dpus=d)
+        rows.append(r)
+        print(r)
+    for skip in (False, True):
+        r = steady_state("BS", args.scale, n_dpus=1, event_skip=skip)
+        r["event_skip"] = skip
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Re-run the three hillclimbed LM cells with the optimized model code and
+diff against the baseline dry-run artifacts (EXPERIMENTS.md §Perf B-D).
+
+Must run like dryrun (512 host devices) — invoke as a module AFTER the
+baseline sweep:
+    PYTHONPATH=src python -m benchmarks.lm_hillclimb
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+
+CELLS = [
+    ("llama3-8b", "train_4k"),
+    ("deepseek-v3-671b", "train_4k"),
+    ("mamba2-130m", "train_4k"),
+]
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+    os.makedirs("reports/hillclimb", exist_ok=True)
+    for arch, shape in CELLS:
+        row = run_cell(arch, shape, multi_pod=False)
+        with open(f"reports/hillclimb/{arch}__{shape}.json", "w") as f:
+            json.dump(row, f, indent=1)
+        base_p = f"reports/dryrun/{arch}__{shape}__sp.json"
+        if os.path.exists(base_p):
+            with open(base_p) as f:
+                base = json.load(f)
+            for k in ("compute_ms", "memory_ms", "collective_ms",
+                      "useful_ratio", "roofline_fraction"):
+                print(f"  {arch} {k}: {base.get(k)} -> {row.get(k)}")
+
+
+if __name__ == "__main__":
+    main()

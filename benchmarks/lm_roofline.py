@@ -1,0 +1,28 @@
+"""LM roofline table: aggregates reports/dryrun/*.json (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def table(dryrun_dir: str = "reports/dryrun") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append({
+            "arch": r.get("arch"), "shape": r.get("shape"),
+            "mesh": r.get("mesh"), "status": r.get("status"),
+            "bottleneck": r.get("bottleneck"),
+            "compute_ms": r.get("compute_ms"),
+            "memory_ms": r.get("memory_ms"),
+            "collective_ms": r.get("collective_ms"),
+            "useful_ratio": r.get("useful_ratio"),
+            "roofline_fraction": r.get("roofline_fraction"),
+        })
+    if not rows:
+        rows = [{"error": f"no dry-run artifacts in {dryrun_dir}; run "
+                          "PYTHONPATH=src python -m repro.launch.dryrun"}]
+    return rows

@@ -1,0 +1,54 @@
+"""Render reports/dryrun/*.json into the EXPERIMENTS.md markdown tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dryrun_dir):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def dryrun_table(rows, mesh_filter=None):
+    out = ["| arch | shape | mesh | status | args GiB/dev | temp GiB/dev |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        b = r.get("bytes_per_device") or {}
+        gib = lambda k: (f"{b.get(k, 0) / 2**30:.2f}" if b else "-")
+        out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | "
+                   f"{r['status']} | {gib('args')} | {gib('temp')} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | kind | compute ms | memory ms | coll ms | "
+           "bottleneck | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != "16x16" or r.get("status") != "OK":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('kind','-')} | "
+            f"{r.get('compute_ms')} | {r.get('memory_ms')} | "
+            f"{r.get('collective_ms')} | {r.get('bottleneck')} | "
+            f"{r.get('useful_ratio')} | {r.get('roofline_fraction')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    rows = load(d)
+    print("### single-pod roofline\n")
+    print(roofline_table(rows))
+    print("\n### dry-run (multi-pod 2x16x16)\n")
+    print(dryrun_table(rows, "2x16x16"))
+    print("\n### dry-run (single-pod 16x16)\n")
+    print(dryrun_table(rows, "16x16"))

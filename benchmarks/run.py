@@ -1,0 +1,66 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per figure/design point).
+``--scale`` grows datasets toward the paper's Table II sizes; default runs
+the suite at CI scale in a few minutes.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig11]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _emit(name: str, wall_s: float, rows):
+    derived = json.dumps(rows, default=float)
+    print(f"{name},{wall_s * 1e6:.0f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--dryrun-dir", default="reports/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import lm_roofline, pim_figs
+
+    char = None
+
+    def need_char():
+        nonlocal char
+        if char is None:
+            char = pim_figs.characterize(args.scale)
+        return char
+
+    benches = {
+        "fig5_util": lambda: pim_figs.fig5_utilization(need_char(), args.scale),
+        "fig6_breakdown": lambda: pim_figs.fig6_breakdown(need_char(), args.scale),
+        "fig7_tlp_hist": lambda: pim_figs.fig7_tlp_hist(need_char(), args.scale),
+        "fig8_tlp_ts": lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale),
+        "fig9_instr_mix": lambda: pim_figs.fig9_instr_mix(need_char(), args.scale),
+        "fig10_scaling": lambda: pim_figs.fig10_strong_scaling(args.scale),
+        "fig11_simt": lambda: pim_figs.fig11_simt(args.scale),
+        "fig12_ilp": lambda: pim_figs.fig12_ilp(args.scale),
+        "fig13_mram_bw": lambda: pim_figs.fig13_mram_bw(args.scale),
+        "fig15_cache": lambda: pim_figs.fig15_cache_vs_scratchpad(args.scale),
+        "mmu_overhead": lambda: pim_figs.mmu_overhead(args.scale),
+        "simulation_rate": lambda: pim_figs.simulation_rate(args.scale),
+        "lm_roofline": lambda: lm_roofline.table(args.dryrun_dir),
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items() if args.only in k}
+
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            rows = [{"error": f"{type(e).__name__}: {e}"}]
+        _emit(name, time.time() - t0, rows)
+
+
+if __name__ == "__main__":
+    main()

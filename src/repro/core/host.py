@@ -1,0 +1,123 @@
+"""Host-side runtime: the analogue of UPMEM's host API
+(``dpu_alloc`` / ``dpu_load`` / ``dpu_push_xfer`` / ``dpu_launch``).
+
+The CPU<->DPU channel is the paper's fixed-bandwidth model (Table I,
+asymmetric AVX write/read paths); transfers to distinct DPUs proceed in
+parallel, so transfer latency = max-per-DPU-bytes / per-DPU-bandwidth —
+the behaviour behind Fig. 10's strong-scaling communication bars.
+Inter-DPU communication must bounce through the host (paper §II-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core import engine, simt, stats
+from repro.core.asm import ARG_BYTES, CACHE_DATA_BASE, Program
+from repro.core.config import DPUConfig
+from repro.core.isa import Binary
+
+
+@dataclass
+class Timeline:
+    """Accumulated end-to-end execution phases (seconds)."""
+
+    h2d: float = 0.0
+    kernel: float = 0.0
+    d2h: float = 0.0
+    inter_dpu: float = 0.0  # DPU->CPU->DPU bounces between kernels
+
+    @property
+    def total(self) -> float:
+        return self.h2d + self.kernel + self.d2h + self.inter_dpu
+
+    def breakdown(self) -> Dict[str, float]:
+        t = max(self.total, 1e-30)
+        return {"kernel": self.kernel / t, "h2d": self.h2d / t,
+                "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t}
+
+
+class PIMSystem:
+    """A rank of DPUs + the host runtime."""
+
+    def __init__(self, cfg: DPUConfig):
+        self.cfg = cfg
+        self.timeline = Timeline()
+        self.reports = []
+
+    # ---- transfer accounting -------------------------------------------------
+    def h2d(self, bytes_per_dpu: float):
+        self.timeline.h2d += bytes_per_dpu / (self.cfg.h2d_gbps_per_dpu * 1e9)
+
+    def d2h(self, bytes_per_dpu: float):
+        self.timeline.d2h += bytes_per_dpu / (self.cfg.d2h_gbps_per_dpu * 1e9)
+
+    def inter_dpu(self, bytes_per_dpu: float):
+        """Producer DPU -> CPU -> consumer DPU bounce."""
+        self.timeline.inter_dpu += (
+            bytes_per_dpu / (self.cfg.d2h_gbps_per_dpu * 1e9)
+            + bytes_per_dpu / (self.cfg.h2d_gbps_per_dpu * 1e9))
+
+    # ---- kernel launch ---------------------------------------------------------
+    def launch(self, name: str, binary: Binary, args: np.ndarray,
+               mram: np.ndarray, n_threads: Optional[int] = None,
+               wram_extra: Optional[np.ndarray] = None):
+        """Run one kernel on all DPUs.
+
+        args: (D, n_args) int32 scalars (host-written WRAM arg area).
+        mram: (D, mram_words) int32 per-DPU bank images.
+        Returns (final_state, KernelReport)."""
+        cfg = self.cfg
+        D = cfg.n_dpus
+        T = n_threads or cfg.n_tasklets
+        assert args.shape[0] == D and mram.shape[0] == D
+        wram = np.zeros((D, max(ARG_BYTES // 4, args.shape[1])), np.int32)
+        wram[:, :args.shape[1]] = args
+        if wram_extra is not None:
+            # cache-centric relink: data sits above the static allocations
+            base = CACHE_DATA_BASE // 4
+            full = np.zeros((D, base + wram_extra.shape[1]), np.int32)
+            full[:, :wram.shape[1]] = wram
+            full[:, base:] = wram_extra
+            wram = full
+        if cfg.simt_width > 0:
+            st = simt.run(cfg, binary, wram, mram, n_threads=T)
+        else:
+            st = engine.run(cfg, binary, wram, mram, n_threads=T)
+        if (st["status"] != engine.DONE).any():
+            raise RuntimeError(
+                f"{name}: kernel hit max_cycles={cfg.max_cycles} "
+                f"(status={np.unique(st['status'])})")
+        rep = stats.report_from_state(name, cfg, st, T)
+        self.timeline.kernel += rep.kernel_seconds
+        self.reports.append(rep)
+        return st, rep
+
+
+def merge_reports(name: str, reps) -> "stats.KernelReport":
+    """Sum multi-kernel reports (BFS/NW iterate kernels)."""
+    import copy
+    out = copy.deepcopy(reps[0])
+    out.name = name
+    for r in reps[1:]:
+        out.cycles += r.cycles
+        out.issued += r.issued
+        out.active_cycles += r.active_cycles
+        out.idle_mem += r.idle_mem
+        out.idle_rev += r.idle_rev
+        out.idle_rf += r.idle_rf
+        for k in out.cls_counts:
+            out.cls_counts[k] += r.cls_counts[k]
+        out.hist = out.hist + r.hist
+        out.dma_rd_bytes += r.dma_rd_bytes
+        out.dma_wr_bytes += r.dma_wr_bytes
+        out.row_hit += r.row_hit
+        out.row_miss += r.row_miss
+        out.tlb_hit += r.tlb_hit
+        out.tlb_miss += r.tlb_miss
+        out.dc_hit += r.dc_hit
+        out.dc_miss += r.dc_miss
+        out.acq_retry += r.acq_retry
+    return out

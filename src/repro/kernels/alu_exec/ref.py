@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the simulator ALU datapath (12-way int32 switch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alu_exec_ref(op, a, b):
+    """op/a/b: int32 arrays (same shape) -> int32 results.
+
+    Semantics (mirrors repro.core.isa / engine):
+      0 ADD  1 SUB  2 AND  3 OR  4 XOR  5 SLL  6 SRL  7 SRA
+      8 MUL  9 DIV(0 -> -1, trunc)  10 SLT  11 SLTU
+    """
+    sh = b.astype(jnp.uint32) & 31
+    au = a.astype(jnp.uint32)
+    bu = b.astype(jnp.uint32)
+    safe_b = jnp.where(b == 0, 1, b)
+    results = [
+        a + b,
+        a - b,
+        a & b,
+        a | b,
+        a ^ b,
+        (au << sh).astype(jnp.int32),
+        (au >> sh).astype(jnp.int32),
+        a >> sh.astype(jnp.int32),
+        a * b,
+        jnp.where(b == 0, -1, jax.lax.div(a, safe_b)),
+        (a < b).astype(jnp.int32),
+        (au < bu).astype(jnp.int32),
+    ]
+    return jnp.select([op == i for i in range(12)], results, jnp.int32(0))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: exact softmax attention (naive, materialises scores)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,Dk)  k: (B,S,KV,Dk)  v: (B,S,KV,Dv) -> (B,S,H,Dv)."""
+    B, S, H, Dk = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, Dk)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dk ** -0.5)
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = idx[None, :] <= idx[:, None]
+    if window > 0:
+        mask = mask & (idx[:, None] - idx[None, :] < window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[-1])

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for one SSD chunk (single head).
+
+Given chunk inputs and the incoming state, computes the chunk outputs and
+the outgoing state — the sequential recurrence unrolled exactly:
+    state_t = exp(dt_t * A) * state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm, state0):
+    """x: (Q,P)  dt: (Q,)  A: ()  Bm/Cm: (Q,N)  state0: (N,P).
+
+    Returns (y (Q,P), state_out (N,P)).  All float32."""
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt * A)
+        state = state * dA + dtt * bt[:, None] * xt[None, :]
+        y = ct @ state
+        return state, y
+
+    state, y = jax.lax.scan(step, state0, (x, dt, Bm, Cm))
+    return y, state

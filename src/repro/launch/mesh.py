@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import and only then calls :func:`make_production_mesh`.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_elastic_mesh(n_devices: int = None, model_parallel: int = None):
+    """Best-effort (data, model) mesh for whatever devices exist —
+    the elastic-rescale path (checkpoint restore re-shards onto it)."""
+    n = n_devices or len(jax.devices())
+    mp = model_parallel or int(np.gcd(n, 16))
+    while n % mp:
+        mp //= 2
+    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+
+
+def make_pipe_mesh(n_stages: int):
+    return jax.make_mesh((n_stages,), ("pipe",), axis_types=_auto(1))

@@ -1,0 +1,201 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+    compute    = HLO_FLOPs              / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes_accessed     / (chips x 819 GB/s HBM)
+    collective = collective_bytes       / (chips x 50 GB/s ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device program
+after SPMD partitioning; multiplied by chip count for the global figure).
+Collective bytes are parsed from the optimized HLO text — every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+result shape, summed per device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# v5e-class hardware constants (per assignment)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every tensor literal in an HLO type string
+    (handles tuples '(bf16[8,128], f32[4])')."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result lines look like: '%x = bf16[...] all-reduce(...)' or
+        # '%t = (f32[..], f32[..]) all-gather(..)'
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(\S+?)\(", s)
+        if not m:
+            continue
+        op = m.group(2).rstrip(".0123456789")  # all-reduce.123 -> all-reduce
+        # fused variants like all-reduce-start
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    bytes_in: float = 0.0
+    bytes_out: float = 0.0
+    bytes_temp: float = 0.0
+    kind: str = "train"
+    model_bytes: float = 0.0  # useful traffic (decode: params + cache)
+    notes: str = ""
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — remat/redundancy waste gauge."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful work / achievable step time on the binding resource.
+
+        train/prefill: useful MODEL_FLOPS time vs the dominant term.
+        decode: bandwidth-bound by definition — useful bytes (params read
+        once + KV/state read once) vs the HLO memory traffic."""
+        t_bound = max(self.compute_s, self.memory_s, self.collective_s)
+        if not t_bound:
+            return 0.0
+        if self.kind == "decode" and self.model_bytes:
+            return (self.model_bytes / (self.chips * HBM_BW)) / t_bound
+        t_use = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_use / t_bound
+
+    def to_row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "bottleneck": self.bottleneck,
+            "model_gflops": round(self.model_flops / 1e9, 1),
+            "useful_ratio": round(self.useful_ratio, 3),
+            "roofline_fraction": round(self.roofline_fraction, 3),
+            "coll": {k: v for k, v in self.coll_breakdown.items() if v},
+            "notes": self.notes,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N*D forward (N_active for MoE)."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def model_bytes_decode(cfg, shape) -> float:
+    """Useful decode traffic: active params once (bf16 compute reads) +
+    KV cache / recurrent state once."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    params = 2.0 * n
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        state = cfg.n_layers * B * cfg.n_ssm_heads * cfg.ssm_state \
+            * cfg.ssm_headdim * 4.0
+    elif cfg.family == "hybrid":
+        ng = cfg.n_layers // 3
+        W = cfg.lru_width or cfg.d_model
+        state = (cfg.n_layers - ng) * B * W * 4.0 \
+            + ng * B * min(cfg.window, S) * cfg.n_kv_heads * cfg.d_head * 4.0
+    elif cfg.use_mla:
+        state = cfg.n_layers * B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2.0
+    else:
+        L = cfg.n_dec_layers or cfg.n_layers
+        state = L * B * S * 2 * cfg.n_kv_heads * cfg.d_head * 2.0
+    return params + state
+
+
+def analyze(compiled, lowered_text: Optional[str], *, arch: str, shape,
+            mesh_name: str, chips: int, cfg, kind: str,
+            notes: str = "") -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    coll = collective_bytes(text)
+    mem = compiled.memory_analysis()
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops(cfg, shape, kind),
+        bytes_in=getattr(mem, "argument_size_in_bytes", 0),
+        bytes_out=getattr(mem, "output_size_in_bytes", 0),
+        bytes_temp=getattr(mem, "temp_size_in_bytes", 0),
+        notes=notes,
+    )

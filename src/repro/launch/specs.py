@@ -1,0 +1,128 @@
+"""Abstract input specs + sharding plans for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation); ``make_cell`` packages the step function
+with in_shardings/donation so launch/dryrun.py can
+``jit(...).lower(...).compile()`` each cell."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.models import transformer as T
+from repro.optim import get_optimizer, warmup_cosine
+from repro.parallel import api as par
+from repro.train import loop as train_loop
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def abstract_params(cfg: ArchConfig):
+    return _sds(jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0))))
+
+
+def abstract_state(cfg: ArchConfig):
+    opt = get_optimizer(cfg.optimizer, warmup_cosine(3e-4))
+    return _sds(jax.eval_shape(
+        lambda: train_loop.init_train_state(cfg, opt, jax.random.PRNGKey(0)))), opt
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training/prefill batch stand-ins (matches repro.data.pipeline)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cfg.family == "encdec":
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm":
+        Pn = cfg.n_frontend_tokens
+        return {"tokens": jax.ShapeDtypeStruct((B, S - Pn), i32),
+                "labels": jax.ShapeDtypeStruct((B, S - Pn), i32),
+                "patches": jax.ShapeDtypeStruct((B, Pn, cfg.d_model), f32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def prefill_specs(cfg, shape):
+    b = batch_specs(cfg, shape)
+    b.pop("labels", None)
+    return b
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    cache = _sds(jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, src_len=S)))
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """Public entry: abstract model inputs for one cell (no allocation)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    cache, tokens = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction (fn + shardings + donation)
+# ---------------------------------------------------------------------------
+
+
+def make_cell(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns dict(fn, args, in_shardings, donate_argnums, kind)."""
+    shape = SHAPES[shape_name]
+    assert cfg.supports_shape(shape), (cfg.name, shape_name)
+
+    if shape.kind == "train":
+        state_abs, opt = abstract_state(cfg)
+        step = train_loop.make_train_step(
+            cfg, opt, microbatches=cfg.train_microbatches)
+
+        def fn(state, batch):
+            return step(state, batch)
+
+        batch = batch_specs(cfg, shape)
+        in_sh = (par.param_shardings(state_abs, mesh),
+                 par.batch_sharding(batch, mesh))
+        return dict(fn=fn, args=(state_abs, batch), in_shardings=in_sh,
+                    donate_argnums=(0,), kind="train")
+
+    params_abs = abstract_params(cfg)
+    psh = par.param_shardings(params_abs, mesh)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return T.prefill(params, batch, cfg)
+
+        batch = prefill_specs(cfg, shape)
+        in_sh = (psh, par.batch_sharding(batch, mesh))
+        return dict(fn=fn, args=(params_abs, batch), in_shardings=in_sh,
+                    donate_argnums=(), kind="prefill")
+
+    cache, tokens = decode_specs(cfg, shape)
+
+    def fn(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg)
+
+    cache_sh = par.cache_sharding(cache, mesh)
+    in_sh = (psh, cache_sh, par.batch_sharding(tokens, mesh))
+    # matching out_shardings lets XLA alias the donated cache buffers
+    return dict(fn=fn, args=(params_abs, cache, tokens), in_shardings=in_sh,
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,), kind="decode")

@@ -1,0 +1,313 @@
+"""Attention: chunked (flash-style) training path, exact decode path,
+GQA / MQA / local-window / cross / MLA variants.
+
+The training path is an online-softmax two-level loop (vmap over query
+blocks, scan over KV blocks) so the (S x S) score matrix is never
+materialised — the same blocking the Pallas kernel
+(:mod:`repro.kernels.flash_attention`) uses on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import cdtype, dense_param
+from repro.models import scan_util
+from repro.parallel import api as par
+
+_NEG = -1e30
+TRIANGLE_SWEEP = False  # see blocked_attention; opt-in (refuted as default)
+
+
+# ---------------------------------------------------------------------------
+# Core blocked attention (no projections)
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_chunk=1024, kv_chunk=1024):
+    """q: (B,S,H,Dk)  k: (B,S,KV,Dk)  v: (B,S,KV,Dv) -> (B,S,H,Dv).
+
+    H must be a multiple of KV (GQA).  ``window>0`` restricts attention to
+    the trailing ``window`` positions (sliding-window / local attention);
+    KV blocks fully outside the window are skipped *statically* so local
+    attention costs O(S * window), not O(S^2).
+    """
+    B, S, H, Dk = q.shape
+    KV = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+    nq, nk = S // qc, S // kc
+    scale = Dk ** -0.5
+
+    qb = q.reshape(B, nq, qc, KV, G, Dk).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kc, KV, Dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kc, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    # static KV-block range per query block (exact for local attention)
+    if window > 0:
+        n_back = -(-window // kc) + 1  # blocks that can intersect the window
+        n_steps = min(n_back, nk)
+    else:
+        n_steps = nk
+
+    def _run_qblock(qi, qblk, steps):
+        """qi static or traced; steps = number of kv blocks to visit."""
+        qpos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, step):
+            m, l, acc = carry
+            if window > 0:
+                ki = jnp.maximum(qi - (n_steps - 1) + step, 0)
+            else:
+                ki = step
+            kblk = jax.lax.dynamic_index_in_dim(kb, ki, axis=0, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, ki, axis=0, keepdims=False)
+            kpos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            allowed = jnp.ones((qc, kc), bool)
+            if causal:
+                allowed = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                allowed = jnp.logical_and(allowed, qpos[:, None] - kpos[None, :] < window)
+            allowed = allowed[None, :, None, None, :]
+            s = jnp.where(allowed, s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(allowed, jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, KV, G), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, qc, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, G, Dv), jnp.float32)
+        (m, l, acc), _ = scan_util.scan(kv_step, (m0, l0, a0),
+                                        jnp.arange(steps))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if causal and window == 0 and nq <= 64 and TRIANGLE_SWEEP:
+        # exact lower-triangle iteration: q-block i visits exactly i+1 KV
+        # blocks (static trip counts) — REFUTED as a default (EXPERIMENTS.md
+        # §Perf B iter 3): under sequence-parallel residuals each unrolled
+        # block re-gathers K/V, doubling collectives/memory; kept opt-in
+        # (it is the right structure for the TPU Pallas kernel, where the
+        # gather does not exist)
+        outs = [_run_qblock(qi, qb[qi], qi + 1) for qi in range(nq)]
+        out = jnp.stack(outs)
+    else:
+        out = jax.vmap(
+            lambda qi, qblk: _run_qblock(qi, qblk, n_steps)
+        )(jnp.arange(nq), qb)  # (nq, B, qc, KV, G, Dv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, Dv)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q: (B,H,Dk)  caches: (B,Smax,KV,D*)  pos: () filled length-1 index.
+
+    Attends to cache positions [0, pos]; exact softmax (memory is O(S))."""
+    B, H, Dk = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Dk)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (Dk ** -0.5)
+    idx = jnp.arange(k_cache.shape[1])
+    s = jnp.where(idx[None, None, None, :] <= pos, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(B, H, -1).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(rng, cfg, *, cross=False):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_param(ks[0], (D, H * Dh), D),
+        "wk": dense_param(ks[1], (D, KV * Dh), D),
+        "wv": dense_param(ks[2], (D, KV * Dh), D),
+        "wo": dense_param(ks[3], (H * Dh, D), H * Dh),
+    }
+
+
+def _project_qkv(p, x, kv_x, cfg):
+    dt = cdtype(cfg)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("...d,dh->...h", x, p["wq"].astype(dt))
+    k = jnp.einsum("...d,dh->...h", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("...d,dh->...h", kv_x, p["wv"].astype(dt))
+    q = q.reshape(*q.shape[:-1], H, Dh)
+    k = k.reshape(*k.shape[:-1], KV, Dh)
+    v = v.reshape(*v.shape[:-1], KV, Dh)
+    return q, k, v
+
+
+def attn_apply_train(p, x, positions, cfg, *, causal=True, window=0, kv_x=None,
+                     use_rope=True):
+    """Full-sequence attention (train / prefill). kv_x!=None => cross-attn."""
+    kv_inp = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(p, x, kv_inp, cfg)
+    if use_rope and kv_x is None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    # head sharding (tp) propagates from the wq/wk/wv column shardings;
+    # explicit constraints here provoke SPMD full-remat reshards inside the
+    # blocked reshape (see EXPERIMENTS.md §Perf iteration log)
+    o = blocked_attention(
+        q, k, v, causal=causal, window=window,
+        q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+    )
+    o = o.reshape(*o.shape[:-2], cfg.n_heads * cfg.d_head)
+    return jnp.einsum("...h,hd->...d", o, p["wo"].astype(cdtype(cfg)))
+
+
+def attn_apply_decode(p, x, pos, cache_k, cache_v, cfg, *, window=0, use_rope=True):
+    """One-token decode. x: (B, D). Returns (out, new_k, new_v)."""
+    dt = cdtype(cfg)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bd,dh->bh", x, p["wq"].astype(dt)).reshape(-1, H, Dh)
+    k = jnp.einsum("bd,dh->bh", x, p["wk"].astype(dt)).reshape(-1, KV, Dh)
+    v = jnp.einsum("bd,dh->bh", x, p["wv"].astype(dt)).reshape(-1, KV, Dh)
+    if use_rope:
+        q = layers.apply_rope(q, pos[None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[None], cfg.rope_theta)
+    if window > 0:
+        slot = jnp.mod(pos, window)
+        eff_pos = jnp.minimum(pos, window - 1)
+    else:
+        slot = pos
+        eff_pos = pos
+    cache_k = jax.lax.dynamic_update_index_in_dim(cache_k, k.astype(cache_k.dtype), slot, 1)
+    cache_v = jax.lax.dynamic_update_index_in_dim(cache_v, v.astype(cache_v.dtype), slot, 1)
+    o = decode_attention(q, cache_k, cache_v, eff_pos)
+    o = o.reshape(-1, H * Dh)
+    out = jnp.einsum("bh,hd->bd", o, p["wo"].astype(dt))
+    return out, cache_k, cache_v
+
+
+def cross_attn_project_kv(p, enc_mem, cfg):
+    """Precompute cross-attention K/V from encoder memory (for decode)."""
+    dt = cdtype(cfg)
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("bsd,dh->bsh", enc_mem, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", enc_mem, p["wv"].astype(dt))
+    return k.reshape(*k.shape[:-1], KV, Dh), v.reshape(*v.shape[:-1], KV, Dh)
+
+
+def cross_attn_decode(p, x, k_mem, v_mem, cfg):
+    dt = cdtype(cfg)
+    H, Dh = cfg.n_heads, cfg.d_head
+    q = jnp.einsum("bd,dh->bh", x, p["wq"].astype(dt)).reshape(-1, H, Dh)
+    o = decode_attention(q, k_mem, v_mem, jnp.asarray(k_mem.shape[1] - 1))
+    return jnp.einsum("bh,hd->bd", o.reshape(-1, H * Dh), p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg):
+    D = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq_a": dense_param(ks[0], (D, qr), D),
+        "q_norm": layers.norm_init(qr),
+        "wq_b": dense_param(ks[1], (qr, H * (dn + dr)), qr),
+        "wkv_a": dense_param(ks[2], (D, kvr + dr), D),
+        "kv_norm": layers.norm_init(kvr),
+        "wk_b": dense_param(ks[3], (kvr, H * dn), kvr),
+        "wv_b": dense_param(ks[4], (kvr, H * dv), kvr),
+        "wo": dense_param(ks[5], (H * dv, D), H * dv),
+    }
+
+
+def _mla_q(p, x, positions, cfg):
+    dt = cdtype(cfg)
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = jnp.einsum("...d,dr->...r", x, p["wq_a"].astype(dt))
+    ql = layers.rms_norm(ql, p["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("...r,rh->...h", ql, p["wq_b"].astype(dt))
+    q = q.reshape(*q.shape[:-1], H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, positions, cfg):
+    dt = cdtype(cfg)
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("...d,dr->...r", x, p["wkv_a"].astype(dt))
+    ckv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    ckv = layers.rms_norm(ckv, p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, k_rope
+
+
+def mla_apply_train(p, x, positions, cfg):
+    """Materialised-KV MLA for train/prefill."""
+    dt = cdtype(cfg)
+    H = cfg.n_heads
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    ckv, k_rope = _mla_latent(p, x, positions, cfg)
+    k_nope = jnp.einsum("...r,rh->...h", ckv, p["wk_b"].astype(dt))
+    k_nope = k_nope.reshape(*k_nope.shape[:-1], H, dn)
+    v = jnp.einsum("...r,rh->...h", ckv, p["wv_b"].astype(dt))
+    v = v.reshape(*v.shape[:-1], H, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[..., None, :], q_rope.shape)], axis=-1
+    )
+    o = blocked_attention(q, k, v, causal=True,
+                          q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    o = o.reshape(*o.shape[:-2], H * dv)
+    return jnp.einsum("...h,hd->...d", o, p["wo"].astype(dt)), (ckv, k_rope)
+
+
+def mla_apply_decode(p, x, pos, cache_ckv, cache_krope, cfg):
+    """Absorbed-matrix MLA decode: scores/output computed in the latent space
+    so the cache stays (kv_lora + rope) wide — the memory win MLA exists for."""
+    dt = cdtype(cfg)
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, pos[None], cfg)  # (B,H,dn), (B,H,dr)
+    ckv, k_rope = _mla_latent(p, x, pos[None], cfg)  # (B,kvr), (B,dr)
+    cache_ckv = jax.lax.dynamic_update_index_in_dim(
+        cache_ckv, ckv.astype(cache_ckv.dtype), pos, 1)
+    cache_krope = jax.lax.dynamic_update_index_in_dim(
+        cache_krope, k_rope.astype(cache_krope.dtype), pos, 1)
+    wk_b = p["wk_b"].astype(dt).reshape(kvr, H, dn)
+    wv_b = p["wv_b"].astype(dt).reshape(kvr, H, dv)
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope, wk_b)  # absorb W^UK
+    s = jnp.einsum("bhr,bsr->bhs", q_eff, cache_ckv, preferred_element_type=jnp.float32)
+    s += jnp.einsum("bhr,bsr->bhs", q_rope, cache_krope,
+                    preferred_element_type=jnp.float32)
+    s *= (dn + dr) ** -0.5
+    idx = jnp.arange(cache_ckv.shape[1])
+    s = jnp.where(idx[None, None, :] <= pos, s, _NEG)
+    a = jax.nn.softmax(s, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhs,bsr->bhr", a, cache_ckv)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wv_b)  # absorb W^UV
+    out = jnp.einsum("bh,hd->bd", o.reshape(o.shape[0], H * dv), p["wo"].astype(dt))
+    return out, cache_ckv, cache_krope

@@ -1,0 +1,154 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Conventions
+-----------
+* Params are nested dicts of ``float32`` arrays (``cfg.param_dtype``);
+  compute happens in ``cfg.dtype`` (bf16 by default) — params are cast at
+  the point of use.
+* Per-layer init functions take an rng and return a single layer's params;
+  :func:`stack_init` vmaps them into scan-stacked ``(L, ...)`` pytrees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def stack_init(init_fn: Callable, rng, n: int):
+    """Stack ``n`` independent layer inits along a leading axis (for scan)."""
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def dense_param(rng, shape, in_axis_size, dtype=jnp.float32):
+    """Fan-in scaled truncated-normal init."""
+    std = in_axis_size ** -0.5
+    return (std * jax.random.truncated_normal(rng, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_param(rng, vocab, d, dtype=jnp.float32):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, (vocab, d))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm_init(d):
+    # stored as a delta around 1.0 (gemma-style) so zeros == identity-ish
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return functools.partial(jax.nn.gelu, approximate=True)
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def mlp_init(rng, d_model: int, d_ff: int, gated: bool):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "wi": dense_param(ks[0], (d_model, d_ff), d_model),
+        "wo": dense_param(ks[1], (d_ff, d_model), d_ff),
+    }
+    if gated:
+        p["wg"] = dense_param(ks[2], (d_model, d_ff), d_model)
+    return p
+
+
+def mlp_apply(p, x, cfg):
+    dt = cdtype(cfg)
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    h = act(h)
+    if "wg" in p:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = h * g
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float):
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponent)  # (d_head // 2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh) or (..., H, Dh) with matching positions (..., S)/(...,)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)  # (Dh/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, Dh/2)
+    # broadcast over the head axis, which sits between S and Dh
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_apply(embedding, tokens, cfg):
+    return embedding.astype(cdtype(cfg))[tokens]
+
+
+def logits_apply(params, x, cfg):
+    """Final norm + LM head (tied or untied)."""
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    w = params["embed"]["tok"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, w.astype(cdtype(cfg)))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, w.astype(cdtype(cfg)))
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token cross-entropy. labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    if mask is not None:
+        valid = jnp.logical_and(valid, mask)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+    n = jnp.maximum(valid.sum(), 1)
+    return -(ll * valid).sum() / n

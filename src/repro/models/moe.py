@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer with expert parallelism.
+
+Two execution paths sharing one parameter layout:
+
+* ``_moe_ep`` — production path: ``shard_map`` over the ``model`` mesh axis
+  (experts sharded, tokens replicated across EP peers as in standard TP).
+  Each EP peer selects up to ``capacity`` tokens per local expert
+  (top-C by router gate — capacity dropping, Switch/GShard style), runs the
+  expert FFNs as dense batched matmuls, scatter-adds the weighted outputs,
+  and ``psum``s across the EP axis.  FLOPs are exactly top-k * token count;
+  communication is one psum of the (tokens, d_model) output.
+* ``_moe_dense`` — reference path for single-device tests: computes every
+  expert on every token and masks.  O(E/k) wasteful; used only at test scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import cdtype, dense_param
+from repro.parallel import api as par
+
+
+def moe_init(rng, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(rng, 5)
+
+    def expert_param(key, shape, fan_in):
+        return dense_param(key, shape, fan_in)
+
+    p = {
+        "router": dense_param(ks[0], (D, E), D),
+        "wi": expert_param(ks[1], (E, D, F), D),
+        "wo": expert_param(ks[2], (E, F, D), F),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = expert_param(ks[3], (E, D, F), D)
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(
+            ks[4], D, F * cfg.n_shared_experts, cfg.gated_mlp
+        )
+    return p
+
+
+def _expert_ffn(xg, wi, wg, wo, cfg):
+    """xg: (E?, C, D) tokens per expert; weights (E?, D, F)/(E?, F, D)."""
+    dt = cdtype(cfg)
+    act = layers.activation_fn(cfg.activation)
+    h = jnp.einsum("ecd,edf->ecf", xg, wi.astype(dt))
+    h = act(h)
+    if wg is not None:
+        h = h * jnp.einsum("ecd,edf->ecf", xg, wg.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(dt))
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _moe_dense(x2d, gates, idx, p, cfg):
+    """Reference: all experts on all tokens, masked combine."""
+    E = cfg.n_experts
+    wg = p.get("wg")
+    y_all = _expert_ffn(
+        jnp.broadcast_to(x2d[None], (E, *x2d.shape)), p["wi"], wg, p["wo"], cfg
+    )  # (E, N, D)
+    combine = jnp.zeros((x2d.shape[0], E), jnp.float32)
+    for j in range(cfg.experts_per_token):
+        combine += jax.nn.one_hot(idx[:, j], E, dtype=jnp.float32) * gates[:, j:j + 1]
+    return jnp.einsum("ne,end->nd", combine.astype(y_all.dtype), y_all)
+
+
+def _ep_body(x, gates, idx, wi, wg, wo, *, cfg, ep_axis, e_loc, capacity):
+    """shard_map body: x (B_loc,S,D) replicated over ep; w* local experts."""
+    B, S, D = x.shape
+    n = B * S
+    x2d = x.reshape(n, D)
+    g2d = gates.reshape(n, -1)
+    i2d = idx.reshape(n, -1)
+    e0 = jax.lax.axis_index(ep_axis) * e_loc
+    # per-token assignment weight for each *local* expert: (N, E_loc)
+    rel = i2d - e0
+    in_range = jnp.logical_and(rel >= 0, rel < e_loc)
+    assign = jnp.zeros((n, e_loc), jnp.float32)
+    for j in range(cfg.experts_per_token):
+        oh = jax.nn.one_hot(jnp.where(in_range[:, j], rel[:, j], e_loc), e_loc + 1,
+                            dtype=jnp.float32)[:, :e_loc]
+        assign += oh * g2d[:, j:j + 1]
+    # capacity selection: top-C tokens per expert by gate weight
+    vals, tok = jax.lax.top_k(assign.T, capacity)  # (E_loc, C)
+    keep = (vals > 0.0).astype(x2d.dtype)
+    xg = jnp.take(x2d, tok.reshape(-1), axis=0).reshape(e_loc, capacity, D)
+    y = _expert_ffn(xg, wi, wg, wo, cfg)
+    y = y * (vals.astype(y.dtype) * keep)[..., None]
+    out = jnp.zeros((n, D), y.dtype).at[tok.reshape(-1)].add(y.reshape(-1, D))
+    out = jax.lax.psum(out, ep_axis)
+    return out.reshape(B, S, D)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (switch-style): E * sum_e f_e * P_e
+    E = cfg.n_experts
+    f = jnp.zeros((E,), jnp.float32)
+    for j in range(cfg.experts_per_token):
+        f += jax.nn.one_hot(idx[..., j].reshape(-1), E, dtype=jnp.float32).mean(0)
+    f = f / cfg.experts_per_token
+    pm = probs.reshape(-1, E).mean(0)
+    aux = E * jnp.sum(f * pm) * cfg.router_aux_weight
+
+    mesh = par.current_mesh()
+    ep_axis = "model" if (mesh is not None and "model" in mesh.axis_names) else None
+    use_ep = ep_axis is not None and E % mesh.shape[ep_axis] == 0 and mesh.shape[ep_axis] > 1
+    if use_ep:
+        ep = mesh.shape[ep_axis]
+        e_loc = E // ep
+        n_loc = max(B * S // _dp_size(mesh), 1)
+        cap = min(_capacity(n_loc, cfg), n_loc)  # top-k bound: <= local tokens
+        dp_spec = par.resolve_spec(("dp", None, None), x.shape, mesh)
+        body = functools.partial(
+            _ep_body, cfg=cfg, ep_axis=ep_axis, e_loc=e_loc, capacity=cap
+        )
+        # cast expert weights BEFORE the shard_map boundary: the FSDP
+        # all-gather of (E, D, F) expert tensors then moves bf16, not f32 —
+        # the dominant collective of MoE training (EXPERIMENTS.md §Perf,
+        # deepseek iteration 1: halves the collective term)
+        wi = p["wi"].astype(dt)
+        wg = p.get("wg")
+        wg = wg.astype(dt) if wg is not None else None
+        wo = p["wo"].astype(dt)
+        out = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                dp_spec,
+                par.resolve_spec(("dp", None, None), gates.shape, mesh),
+                par.resolve_spec(("dp", None, None), idx.shape, mesh),
+                P(ep_axis), P(ep_axis) if wg is not None else P(), P(ep_axis),
+            ),
+            out_specs=dp_spec,
+            check_vma=False,
+        )(x, gates, idx, wi, wg if wg is not None else jnp.zeros(()), wo)
+    else:
+        out = _moe_dense(
+            x.reshape(-1, D), gates.reshape(-1, cfg.experts_per_token),
+            idx.reshape(-1, cfg.experts_per_token), p, cfg
+        ).reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], x, cfg)
+    return out.astype(dt), aux
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t), with input gate i_t and recurrence
+gate r_t.  Training uses a chunked linear scan (associative scan within a
+chunk, ``lax.scan`` across chunks); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models import scan_util
+from repro.models.layers import cdtype, dense_param
+
+_C = 8.0
+
+
+def lru_init(rng, cfg):
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_x": dense_param(ks[0], (D, W), D),
+        "w_gate": dense_param(ks[1], (D, W), D),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.ssm_conv, W)),
+        "conv_b": jnp.zeros((W,)),
+        "w_in_gate": dense_param(ks[3], (W, W), W),
+        "b_in_gate": jnp.zeros((W,)),
+        "w_rec_gate": dense_param(ks[4], (W, W), W),
+        "b_rec_gate": jnp.zeros((W,)),
+        # init so a ~ U(0.9, 0.999)-ish (griffin init)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, W)) / _C)),
+        "out_proj": dense_param(ks[5], (W, D), W),
+    }
+
+
+def _gates(p, u, cfg):
+    dt = cdtype(cfg)
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", u, p["w_in_gate"].astype(dt))
+        + p["b_in_gate"].astype(dt))
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", u, p["w_rec_gate"].astype(dt))
+        + p["b_rec_gate"].astype(dt))
+    log_a = (-_C * jax.nn.softplus(p["lam"])[None] * r.astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = beta * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return log_a, b  # f32
+
+
+def linear_scan(log_a, b, h0, chunk):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t.  log_a/b: (B,S,W) f32; h0: (B,W).
+    Returns (h (B,S,W), h_last)."""
+    B, S, W = b.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # log_a=0, b=0 padding is inert (h carried unchanged)
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // Q
+    la = log_a.reshape(B, nc, Q, W).transpose(1, 0, 2, 3)
+    bb = b.reshape(B, nc, Q, W).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        (la1, b1), (la2, b2) = l, r
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    def chunk_step(h, inp):
+        la_c, b_c = inp  # (B,Q,W)
+        la_s, b_s = jax.lax.associative_scan(combine, (la_c, b_c), axis=1)
+        h_c = b_s + jnp.exp(la_s) * h[:, None, :]
+        return h_c[:, -1], h_c
+
+    h_last, hc = scan_util.scan(chunk_step, h0, (la, bb))
+    h_full = hc.transpose(1, 0, 2, 3).reshape(B, S_p, W)[:, :S]
+    h_last = h_full[:, -1]  # last REAL step (padding holds h constant)
+    return h_full, h_last
+
+
+def lru_apply_train(p, x, cfg, return_state=False):
+    """x: (B,S,D) -> (B,S,D)."""
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    W = cfg.lru_width or D
+    u = jnp.einsum("...d,dw->...w", x, p["w_x"].astype(dt))
+    gate = jnp.einsum("...d,dw->...w", x, p["w_gate"].astype(dt))
+    from repro.models.ssm import causal_conv
+    u = causal_conv(u, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    conv_tail = None
+    log_a, b = _gates(p, u, cfg)
+    h0 = jnp.zeros((B, W), jnp.float32)
+    h, h_last = linear_scan(log_a, b, h0, cfg.ssm_chunk)
+    y = h.astype(dt) * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("...w,wd->...d", y, p["out_proj"].astype(dt))
+    if return_state:
+        # conv buffer keeps the last K-1 *pre-conv* inputs
+        u_pre = jnp.einsum("...d,dw->...w", x[:, -(cfg.ssm_conv - 1):, :],
+                           p["w_x"].astype(dt))
+        return out, (h_last, u_pre)
+    return out
+
+
+def lru_apply_decode(p, x, h, conv_buf, cfg):
+    """x: (B,D); h: (B,W) f32; conv_buf: (B,K-1,W) pre-conv inputs."""
+    dt = cdtype(cfg)
+    u_pre = jnp.einsum("bd,dw->bw", x, p["w_x"].astype(dt))
+    gate = jnp.einsum("bd,dw->bw", x, p["w_gate"].astype(dt))
+    hist = jnp.concatenate([conv_buf, u_pre[:, None, :]], axis=1)  # (B,K,W)
+    u = jnp.einsum("bkw,kw->bw", hist, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt)
+    new_buf = hist[:, 1:, :]
+    log_a, b = _gates(p, u, cfg)
+    h = jnp.exp(log_a) * h + b
+    y = h.astype(dt) * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("bw,wd->bd", y, p["out_proj"].astype(dt))
+    return out, h, new_buf

@@ -1,0 +1,31 @@
+"""Scan wrapper with an analysis-unroll mode.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so FLOPs/bytes/collectives of scan-over-layers programs are
+undercounted by ~L in ``cost_analysis()``.  The roofline pass therefore
+lowers *unrolled* reduced-depth variants (2 and 4 scan units) and
+extrapolates linearly in depth (launch/dryrun.py) — this module routes
+every model scan through one switch."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_UNROLL = False
+
+
+@contextmanager
+def unrolled():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if _UNROLL else 1)

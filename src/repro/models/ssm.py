@@ -1,0 +1,187 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Training/prefill uses the chunked dual form: quadratic attention-like math
+*within* a chunk, linear state recurrence *across* chunks
+(``lax.scan`` carrying the (H, N, P) state).  Decode is the O(1) recurrent
+update.  The intra-chunk compute is the hot spot the
+:mod:`repro.kernels.ssd_scan` Pallas kernel tiles for VMEM on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models import scan_util
+from repro.models.layers import cdtype, dense_param
+
+
+def ssm_init(rng, cfg):
+    D = cfg.d_model
+    d_in = cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_param(ks[0], (D, 2 * d_in + 2 * G * N + H), D),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D_skip": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (H,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "gate_norm": layers.norm_init(d_in),
+        "out_proj": dense_param(ks[3], (d_in, D), d_in),
+    }
+
+
+def causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_zxbcdt(p, x, cfg):
+    dt_ = cdtype(cfg)
+    d_in = cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = jnp.einsum("...d,dk->...k", x, p["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_in]
+    rest = zxbcdt[..., d_in:2 * d_in + 2 * G * N]
+    dt_raw = zxbcdt[..., -H:]
+    return z, rest, dt_raw
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H) f32  A: (H,) negative  Bm/Cm: (B,S,G,N)
+    (group form — heads within a group share B/C; the group->head broadcast
+    happens inside the einsums so the (B,S,H,N) expansion is never
+    materialised; EXPERIMENTS.md §Perf, mamba2 iteration 1).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    hg = H // G  # heads per group
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is inert: decay 1, zero state/output contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_p = S + pad
+    nc = S_p // Q
+
+    def to_chunks(t):
+        return t.reshape(Bsz, nc, Q, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))  # leading axis nc
+
+    def chunk_step(state, inp):
+        xq, dq, bq, cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,G,N) x2
+        dA = dq * A  # (B,Q,H) negative increments
+        seg = jnp.cumsum(dA, axis=1)  # (B,Q,H)
+        segg = seg.reshape(*seg.shape[:2], G, hg)
+        total = seg[:, -1]  # (B,H)
+        state_g = state.reshape(Bsz, G, hg, N, Pd)
+        # --- inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum(
+            "bqgn,bqgh,bghnp->bqghp", cq,
+            jnp.exp(segg).astype(cq.dtype), state_g,
+            preferred_element_type=jnp.float32).reshape(Bsz, Q, H, Pd)
+        # --- intra-chunk (quadratic in Q); cb computed once per group
+        cb = jnp.einsum("bqgn,bkgn->bgqk", cq, bq,
+                        preferred_element_type=jnp.float32)
+        decay = jnp.exp(seg[:, :, None] - seg[:, None, :]).transpose(0, 3, 1, 2)
+        # decay[b,h,q,k] = exp(seg_q - seg_k)
+        decay = decay.reshape(Bsz, G, hg, Q, Q)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        dqh = dq.transpose(0, 2, 1).reshape(Bsz, G, hg, 1, Q)
+        w = jnp.where(mask[None, None, None], cb[:, :, None] * decay * dqh,
+                      0.0)
+        xg = xq.reshape(Bsz, Q, G, hg, Pd)
+        y_intra = jnp.einsum("bghqk,bkghp->bqghp", w.astype(xq.dtype), xg,
+                             preferred_element_type=jnp.float32
+                             ).reshape(Bsz, Q, H, Pd)
+        # --- state update
+        wk = jnp.exp(total[:, None] - seg) * dq  # (B,Q,H)
+        wkg = wk.reshape(Bsz, Q, G, hg)
+        new_state = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bqgn,bqgh,bqghp->bghnp", bq.astype(jnp.float32), wkg, xg,
+            preferred_element_type=jnp.float32).reshape(Bsz, H, N, Pd)
+        return new_state, (y_inter + y_intra).astype(xq.dtype)
+
+    state0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    final_state, yc = scan_util.scan(chunk_step, state0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S_p, H, Pd)[:, :S]
+    return y, final_state
+
+
+def ssm_apply_train(p, x, cfg, return_state=False):
+    """x: (B,S,D) -> (B,S,D) [+ (state, conv_tail) when return_state]."""
+    dt_ = cdtype(cfg)
+    d_in = cfg.d_inner
+    G, N, H, Pd = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    z, rest, dt_raw = _split_zxbcdt(p, x, cfg)
+    conv_out = causal_conv(rest, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + G * N]
+    Cm = conv_out[..., d_in + G * N:]
+    B_, S, _ = x.shape
+    xh = xs.reshape(B_, S, H, Pd)
+    Bg = Bm.reshape(B_, S, G, N)  # group form; broadcast inside ssd_chunked
+    Cg = Cm.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xh, dt, A, Bg, Cg, cfg.ssm_chunk)
+    y = y + xh * p["D_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B_, S, d_in)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["gate_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("...k,kd->...d", y, p["out_proj"].astype(dt_))
+    if return_state:
+        conv_tail = rest[:, -(cfg.ssm_conv - 1):, :]  # pre-conv inputs
+        return out, (state, conv_tail)
+    return out
+
+
+def ssm_apply_decode(p, x, state, conv_buf, cfg):
+    """One-token decode.  x: (B,D); state: (B,H,N,P) f32;
+    conv_buf: (B, K-1, conv_dim) pre-activation conv inputs."""
+    dt_ = cdtype(cfg)
+    d_in = cfg.d_inner
+    G, N, H, Pd = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    z, rest, dt_raw = _split_zxbcdt(p, x, cfg)  # rest: (B, conv_dim)
+    K = cfg.ssm_conv
+    w = p["conv_w"].astype(dt_)
+    hist = jnp.concatenate([conv_buf, rest[:, None, :]], axis=1)  # (B,K,conv)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(dt_)
+    conv_out = jax.nn.silu(conv_out)
+    new_buf = hist[:, 1:, :]
+    xs = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + G * N]
+    Cm = conv_out[..., d_in + G * N:]
+    B_ = x.shape[0]
+    xh = xs.reshape(B_, H, Pd)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B_, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B_, G, N), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dt[..., None], xh.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state).astype(dt_)
+    y = y + xh * p["D_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(B_, d_in)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["gate_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(dt_))
+    return out, state, new_buf

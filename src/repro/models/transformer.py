@@ -1,0 +1,646 @@
+"""Model assembly for all assigned architecture families.
+
+Families
+--------
+* ``dense`` / ``vlm``  — GQA decoder stack (vlm scatters stub patch
+  embeddings in front of the token embeddings)
+* ``moe``              — GQA or MLA attention + (dense prefix, MoE rest)
+* ``ssm``              — Mamba-2 (SSD) mixer stack
+* ``hybrid``           — RecurrentGemma (rglru, rglru, local-attn) pattern
+* ``encdec``           — bidirectional encoder + causal decoder w/ cross-attn
+
+All decoder stacks are scan-over-layers with optional per-block remat.
+Three entry points per family: ``loss_and_metrics`` (train),
+``prefill`` (build cache), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, moe, rglru, ssm
+from repro.models.layers import cdtype, stack_init
+from repro.models import scan_util
+from repro.parallel import api as par
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+
+def _dense_block_init(rng, cfg, use_mla=False):
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln1": layers.norm_init(cfg.d_model),
+        "attn": attn.mla_init(ks[0], cfg) if use_mla else attn.attn_init(ks[0], cfg),
+        "ln2": layers.norm_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def _moe_block_init(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": layers.norm_init(cfg.d_model),
+        "attn": attn.mla_init(ks[0], cfg) if cfg.use_mla else attn.attn_init(ks[0], cfg),
+        "ln2": layers.norm_init(cfg.d_model),
+        "moe": moe.moe_init(ks[1], cfg),
+    }
+
+
+def _ssm_block_init(rng, cfg):
+    return {"ln": layers.norm_init(cfg.d_model), "ssm": ssm.ssm_init(rng, cfg)}
+
+
+def _lru_block_init(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": layers.norm_init(cfg.d_model),
+        "lru": rglru.lru_init(ks[0], cfg),
+        "ln2": layers.norm_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def _attn_block_init(rng, cfg):
+    return _dense_block_init(rng, cfg)
+
+
+def _hybrid_group_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {
+        "lru0": _lru_block_init(ks[0], cfg),
+        "lru1": _lru_block_init(ks[1], cfg),
+        "attn": _attn_block_init(ks[2], cfg),
+    }
+
+
+def _dec_block_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": layers.norm_init(cfg.d_model),
+        "self_attn": attn.attn_init(ks[0], cfg),
+        "ln2": layers.norm_init(cfg.d_model),
+        "cross_attn": attn.attn_init(ks[1], cfg),
+        "ln3": layers.norm_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def init_params(cfg, rng) -> Params:
+    ks = jax.random.split(rng, 8)
+    p: Params = {
+        "embed": {"tok": layers.embed_param(ks[0], cfg.vocab_size, cfg.d_model)},
+        "final_norm": layers.norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {
+            "w": layers.dense_param(ks[1], (cfg.d_model, cfg.vocab_size), cfg.d_model)
+        }
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = stack_init(
+            functools.partial(_dense_block_init, cfg=cfg), ks[2], cfg.n_layers)
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            p["dense_blocks"] = stack_init(
+                functools.partial(_dense_block_init, cfg=cfg, use_mla=cfg.use_mla),
+                ks[2], cfg.n_dense_layers)
+        p["moe_blocks"] = stack_init(
+            functools.partial(_moe_block_init, cfg=cfg), ks[3],
+            cfg.n_layers - cfg.n_dense_layers)
+    elif fam == "ssm":
+        p["blocks"] = stack_init(
+            functools.partial(_ssm_block_init, cfg=cfg), ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        assert pat == ("rglru", "rglru", "local"), "hybrid supports the rg pattern"
+        ng, rem = divmod(cfg.n_layers, len(pat))
+        p["groups"] = stack_init(
+            functools.partial(_hybrid_group_init, cfg=cfg), ks[2], ng)
+        if rem:
+            assert rem <= 2
+            p["rem_lru"] = stack_init(
+                functools.partial(_lru_block_init, cfg=cfg), ks[3], rem)
+    elif fam == "encdec":
+        p["enc_blocks"] = stack_init(
+            functools.partial(_dense_block_init, cfg=cfg), ks[2], cfg.n_enc_layers)
+        p["enc_norm"] = layers.norm_init(cfg.d_model)
+        p["dec_blocks"] = stack_init(
+            functools.partial(_dec_block_init, cfg=cfg), ks[3], cfg.n_dec_layers)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ===========================================================================
+# Train-mode block bodies
+# ===========================================================================
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+def _x_constraint(x):
+    if x.ndim == 3:
+        # sequence-parallel residual stream: (batch->dp, seq->sp, d)
+        return par.shard_activation(x, ("dp", "sp", None))
+    return par.shard_activation(x, ("dp",) + (None,) * (x.ndim - 1))
+
+
+def _dense_block_apply(p, x, positions, cfg, *, causal=True, window=0,
+                       use_mla=False, collect_kv=False):
+    x = _x_constraint(x)
+    h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    kv = None
+    if use_mla:
+        h, kv = attn.mla_apply_train(p["attn"], h, positions, cfg)
+    else:
+        if collect_kv:
+            h, kv = _attn_with_kv(p["attn"], h, positions, cfg, causal, window)
+        else:
+            h = attn.attn_apply_train(p["attn"], h, positions, cfg,
+                                      causal=causal, window=window)
+    x = x + h
+    h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + layers.mlp_apply(p["mlp"], h, cfg)
+    return (x, kv) if (collect_kv or use_mla) else x
+
+
+def _attn_with_kv(p, h, positions, cfg, causal, window):
+    """Like attn_apply_train but also returns the rope'd K/V (prefill)."""
+    q, k, v = attn._project_qkv(p, h, h, cfg)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    o = attn.blocked_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    o = o.reshape(*o.shape[:-2], cfg.n_heads * cfg.d_head)
+    out = jnp.einsum("...h,hd->...d", o, p["wo"].astype(cdtype(cfg)))
+    return out, (k, v)
+
+
+def _moe_block_apply(p, x, positions, cfg, collect_kv=False):
+    x = _x_constraint(x)
+    h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    kv = None
+    if cfg.use_mla:
+        h, kv = attn.mla_apply_train(p["attn"], h, positions, cfg)
+    elif collect_kv:
+        h, kv = _attn_with_kv(p["attn"], h, positions, cfg, True, 0)
+    else:
+        h = attn.attn_apply_train(p["attn"], h, positions, cfg)
+    x = x + h
+    h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    y, aux = moe.moe_apply(p["moe"], h, cfg)
+    x = x + y
+    return (x, aux, kv)
+
+
+def _ssm_block_apply(p, x, cfg, collect_state=False):
+    x = _x_constraint(x)
+    h = layers.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    if collect_state:
+        y, st = ssm.ssm_apply_train(p["ssm"], h, cfg, return_state=True)
+        return x + y, st
+    return x + ssm.ssm_apply_train(p["ssm"], h, cfg)
+
+
+def _lru_block_apply(p, x, cfg, collect_state=False):
+    x = _x_constraint(x)
+    h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if collect_state:
+        y, st = rglru.lru_apply_train(p["lru"], h, cfg, return_state=True)
+    else:
+        y = rglru.lru_apply_train(p["lru"], h, cfg)
+        st = None
+    x = x + y
+    h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + layers.mlp_apply(p["mlp"], h, cfg)
+    return (x, st) if collect_state else x
+
+
+# ===========================================================================
+# Forward (train): returns final hidden state + aux loss
+# ===========================================================================
+
+
+def forward_hidden(params, tokens, cfg, *, patches=None, frames=None,
+                   tgt_tokens=None):
+    """Returns (hidden (B,S,D), aux_loss)."""
+    fam = cfg.family
+    dt = cdtype(cfg)
+
+    if fam == "encdec":
+        enc = _encode(params, frames, cfg)
+        x = layers.embed_apply(params["embed"]["tok"], tgt_tokens, cfg)
+        S = tgt_tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), tgt_tokens.shape)
+
+        def dec_body(carry, p):
+            x = _x_constraint(carry)
+            h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+            x = x + attn.attn_apply_train(p["self_attn"], h, positions, cfg)
+            h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+            x = x + attn.attn_apply_train(p["cross_attn"], h, positions, cfg,
+                                          causal=False, kv_x=enc, use_rope=False)
+            h = layers.rms_norm(x, p["ln3"]["scale"], cfg.norm_eps)
+            x = x + layers.mlp_apply(p["mlp"], h, cfg)
+            return x, None
+
+        x, _ = scan_util.scan(_maybe_remat(dec_body, cfg), x, params["dec_blocks"])
+        return x, jnp.float32(0.0)
+
+    if fam == "vlm":
+        tok_emb = layers.embed_apply(params["embed"]["tok"], tokens, cfg)
+        x = jnp.concatenate([patches.astype(dt), tok_emb], axis=1)
+    else:
+        x = layers.embed_apply(params["embed"]["tok"], tokens, cfg)
+    x = _x_constraint(x)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    aux = jnp.float32(0.0)
+    if fam in ("dense", "vlm"):
+        def body(carry, p):
+            return _dense_block_apply(p, carry, positions, cfg), None
+        x, _ = scan_util.scan(_maybe_remat(body, cfg), x, params["blocks"])
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            def dbody(carry, p):
+                out = _dense_block_apply(p, carry, positions, cfg,
+                                         use_mla=cfg.use_mla)
+                return (out[0] if isinstance(out, tuple) else out), None
+            x, _ = scan_util.scan(_maybe_remat(dbody, cfg), x, params["dense_blocks"])
+
+        def mbody(carry, p):
+            x, aux = carry
+            x, a, _ = _moe_block_apply(p, x, positions, cfg)
+            return (x, aux + a), None
+        (x, aux), _ = scan_util.scan(_maybe_remat(mbody, cfg), (x, aux),
+                                   params["moe_blocks"])
+    elif fam == "ssm":
+        def body(carry, p):
+            return _ssm_block_apply(p, carry, cfg), None
+        x, _ = scan_util.scan(_maybe_remat(body, cfg), x, params["blocks"])
+    elif fam == "hybrid":
+        def gbody(carry, p):
+            x = _lru_block_apply(p["lru0"], carry, cfg)
+            x = _lru_block_apply(p["lru1"], x, cfg)
+            x = _dense_block_apply(p["attn"], x, positions, cfg,
+                                   window=cfg.window)
+            return x, None
+        x, _ = scan_util.scan(_maybe_remat(gbody, cfg), x, params["groups"])
+        if "rem_lru" in params:
+            def rbody(carry, p):
+                return _lru_block_apply(p, carry, cfg), None
+            x, _ = scan_util.scan(_maybe_remat(rbody, cfg), x, params["rem_lru"])
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def _encode(params, frames, cfg):
+    """Encoder over precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(cdtype(cfg))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, p):
+        return _dense_block_apply(p, carry, positions, cfg, causal=False), None
+
+    x, _ = scan_util.scan(_maybe_remat(body, cfg), x, params["enc_blocks"])
+    return layers.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+# ===========================================================================
+# Loss (sequence-chunked so (B,S,V) logits are never materialised)
+# ===========================================================================
+
+
+def _xent_sums(logits, labels):
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+    return -(ll * valid).sum(), valid.sum()
+
+
+def lm_loss_from_hidden(params, hidden, labels, cfg, chunk=1024):
+    B, S, D = hidden.shape
+    # largest divisor of S that fits the chunk budget (vlm text spans are
+    # not powers of two, e.g. 4096 - 2880 = 1216)
+    C = max(d for d in range(1, min(chunk, S) + 1) if S % d == 0)
+    nc = S // C
+    xc = hidden.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, C).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        xb, lb = inp
+        logits = layers.logits_apply(params, xb, cfg)
+        logits = par.shard_activation(logits, ("dp", None, "tp"))
+        s, n = _xent_sums(logits, lb)
+        return (carry[0] + s, carry[1] + n), None
+
+    (tot, n), _ = scan_util.scan(step, (jnp.float32(0), jnp.int32(0)), (xc, lc))
+    return tot / jnp.maximum(n, 1)
+
+
+def loss_and_metrics(params, batch, cfg):
+    """batch: family-dependent dict -> (loss, metrics dict)."""
+    fam = cfg.family
+    if fam == "encdec":
+        hidden, aux = forward_hidden(params, None, cfg, frames=batch["frames"],
+                                     tgt_tokens=batch["tokens"])
+        labels = batch["labels"]
+    elif fam == "vlm":
+        hidden, aux = forward_hidden(params, batch["tokens"], cfg,
+                                     patches=batch["patches"])
+        hidden = hidden[:, batch["patches"].shape[1]:]  # loss on text positions
+        labels = batch["labels"]
+    else:
+        hidden, aux = forward_hidden(params, batch["tokens"], cfg)
+        labels = batch["labels"]
+    xent = lm_loss_from_hidden(params, hidden, labels, cfg)
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+# ===========================================================================
+# Serving: cache init / prefill / decode
+# ===========================================================================
+
+
+def init_cache(cfg, batch: int, capacity: int, src_len: int = 0):
+    dt = cdtype(cfg)
+    fam = cfg.family
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    pos = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "vlm"):
+        L = cfg.n_layers
+        return {"k": jnp.zeros((L, batch, capacity, KV, Dh), dt),
+                "v": jnp.zeros((L, batch, capacity, KV, Dh), dt), "pos": pos}
+    if fam == "moe":
+        c: Dict[str, Any] = {"pos": pos}
+        Lm = cfg.n_layers - cfg.n_dense_layers
+        if cfg.use_mla:
+            kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+            if cfg.n_dense_layers:
+                c["ckv_d"] = jnp.zeros((cfg.n_dense_layers, batch, capacity, kvr), dt)
+                c["krope_d"] = jnp.zeros((cfg.n_dense_layers, batch, capacity, dr), dt)
+            c["ckv_m"] = jnp.zeros((Lm, batch, capacity, kvr), dt)
+            c["krope_m"] = jnp.zeros((Lm, batch, capacity, dr), dt)
+        else:
+            if cfg.n_dense_layers:
+                c["k_d"] = jnp.zeros((cfg.n_dense_layers, batch, capacity, KV, Dh), dt)
+                c["v_d"] = jnp.zeros((cfg.n_dense_layers, batch, capacity, KV, Dh), dt)
+            c["k_m"] = jnp.zeros((Lm, batch, capacity, KV, Dh), dt)
+            c["v_m"] = jnp.zeros((Lm, batch, capacity, KV, Dh), dt)
+        return c
+    if fam == "ssm":
+        L, H, N, Pd = cfg.n_layers, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * N
+        return {"state": jnp.zeros((L, batch, H, N, Pd), jnp.float32),
+                "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
+                "pos": pos}
+    if fam == "hybrid":
+        ng, rem = divmod(cfg.n_layers, 3)
+        W = cfg.lru_width or cfg.d_model
+        K = cfg.ssm_conv
+        win = min(cfg.window, capacity)
+        c = {"lru_h": jnp.zeros((ng, 2, batch, W), jnp.float32),
+             "lru_conv": jnp.zeros((ng, 2, batch, K - 1, W), dt),
+             "attn_k": jnp.zeros((ng, batch, win, KV, Dh), dt),
+             "attn_v": jnp.zeros((ng, batch, win, KV, Dh), dt),
+             "pos": pos}
+        if rem:
+            c["rem_lru_h"] = jnp.zeros((rem, batch, W), jnp.float32)
+            c["rem_lru_conv"] = jnp.zeros((rem, batch, K - 1, W), dt)
+        return c
+    if fam == "encdec":
+        Ld = cfg.n_dec_layers
+        return {"self_k": jnp.zeros((Ld, batch, capacity, KV, Dh), dt),
+                "self_v": jnp.zeros((Ld, batch, capacity, KV, Dh), dt),
+                "cross_k": jnp.zeros((Ld, batch, src_len, KV, Dh), dt),
+                "cross_v": jnp.zeros((Ld, batch, src_len, KV, Dh), dt),
+                "pos": pos}
+    raise ValueError(fam)
+
+
+def prefill(params, batch, cfg):
+    """Process the prompt, return (last-position logits (B,V), cache)."""
+    fam = cfg.family
+    dt = cdtype(cfg)
+
+    if fam == "encdec":
+        frames = batch["frames"]
+        enc = _encode(params, frames, cfg)
+        B, Ssrc = frames.shape[0], frames.shape[1]
+
+        def dec_kv(carry, p):
+            k, v = attn.cross_attn_project_kv(p["cross_attn"], enc, cfg)
+            return carry, (k, v)
+
+        _, (ck, cv) = scan_util.scan(dec_kv, 0, params["dec_blocks"])
+        cache = init_cache(cfg, B, capacity=frames.shape[1], src_len=Ssrc)
+        cache["cross_k"], cache["cross_v"] = ck.astype(dt), cv.astype(dt)
+        bos = jnp.zeros((B,), jnp.int32)
+        logits, cache = decode_step(params, cache, bos, cfg)
+        return logits, cache
+
+    if fam == "vlm":
+        tok_emb = layers.embed_apply(params["embed"]["tok"], batch["tokens"], cfg)
+        x = jnp.concatenate([batch["patches"].astype(dt), tok_emb], axis=1)
+    else:
+        x = layers.embed_apply(params["embed"]["tok"], batch["tokens"], cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if fam in ("dense", "vlm"):
+        def body(carry, p):
+            x, kv = _dense_block_apply(p, carry, positions, cfg, collect_kv=True)
+            return x, (kv[0].astype(dt), kv[1].astype(dt))
+        x, (k, v) = scan_util.scan(body, x, params["blocks"])
+        cache = {"k": k, "v": v, "pos": jnp.int32(S)}
+    elif fam == "moe":
+        cache = {"pos": jnp.int32(S)}
+        if cfg.n_dense_layers:
+            def dbody(carry, p):
+                x, kv = _dense_block_apply(p, carry, positions, cfg,
+                                           use_mla=cfg.use_mla, collect_kv=True)
+                return x, tuple(t.astype(dt) for t in kv)
+            x, kvs = scan_util.scan(dbody, x, params["dense_blocks"])
+            if cfg.use_mla:
+                cache["ckv_d"], cache["krope_d"] = kvs
+            else:
+                cache["k_d"], cache["v_d"] = kvs
+
+        def mbody(carry, p):
+            x, aux, kv = _moe_block_apply(p, carry, positions, cfg, collect_kv=True)
+            return x, tuple(t.astype(dt) for t in kv)
+        x, kvs = scan_util.scan(mbody, x, params["moe_blocks"])
+        if cfg.use_mla:
+            cache["ckv_m"], cache["krope_m"] = kvs
+        else:
+            cache["k_m"], cache["v_m"] = kvs
+    elif fam == "ssm":
+        def body(carry, p):
+            x, st = _ssm_block_apply(p, carry, cfg, collect_state=True)
+            return x, (st[0], st[1].astype(dt))
+        x, (state, conv) = scan_util.scan(body, x, params["blocks"])
+        cache = {"state": state, "conv": conv, "pos": jnp.int32(S)}
+    elif fam == "hybrid":
+        win = cfg.window
+
+        def gbody(carry, p):
+            x = carry
+            x, st0 = _lru_block_apply(p["lru0"], x, cfg, collect_state=True)
+            x, st1 = _lru_block_apply(p["lru1"], x, cfg, collect_state=True)
+            x, kv = _dense_block_apply(p["attn"], x, positions, cfg,
+                                       window=win, collect_kv=True)
+            k, v = (t[:, -win:].astype(dt) for t in kv)
+            lru_h = jnp.stack([st0[0], st1[0]])
+            lru_conv = jnp.stack([st0[1].astype(dt), st1[1].astype(dt)])
+            return x, (lru_h, lru_conv, k, v)
+        x, (lh, lc, k, v) = scan_util.scan(gbody, x, params["groups"])
+        cache = {"lru_h": lh, "lru_conv": lc, "attn_k": k, "attn_v": v,
+                 "pos": jnp.int32(S)}
+        if "rem_lru" in params:
+            def rbody(carry, p):
+                x, st = _lru_block_apply(p, carry, cfg, collect_state=True)
+                return x, (st[0], st[1].astype(dt))
+            x, (rh, rc) = scan_util.scan(rbody, x, params["rem_lru"])
+            cache["rem_lru_h"], cache["rem_lru_conv"] = rh, rc
+    else:
+        raise ValueError(fam)
+
+    logits = layers.logits_apply(params, x[:, -1], cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg):
+    """One token for the whole batch.  tokens: (B,) int32."""
+    fam = cfg.family
+    dt = cdtype(cfg)
+    pos = cache["pos"]
+    x = layers.embed_apply(params["embed"]["tok"], tokens, cfg)  # (B, D)
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm"):
+        def body(x, inp):
+            p, k, v = inp
+            h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+            h, k, v = attn.attn_apply_decode(p["attn"], h, pos, k, v, cfg)
+            x = x + h
+            h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+            x = x + layers.mlp_apply(p["mlp"], h, cfg)
+            return x, (k, v)
+        x, (k, v) = scan_util.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache.update(k=k, v=v)
+    elif fam == "moe":
+        def attn_step(p, x, *kv):
+            h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+            if cfg.use_mla:
+                h, a, b = attn.mla_apply_decode(p["attn"], h, pos, kv[0], kv[1], cfg)
+            else:
+                h, a, b = attn.attn_apply_decode(p["attn"], h, pos, kv[0], kv[1], cfg)
+            return x + h, a, b
+
+        if cfg.n_dense_layers:
+            keys = ("ckv_d", "krope_d") if cfg.use_mla else ("k_d", "v_d")
+
+            def dbody(x, inp):
+                p, a, b = inp
+                x, a, b = attn_step(p, x, a, b)
+                h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+                x = x + layers.mlp_apply(p["mlp"], h, cfg)
+                return x, (a, b)
+            x, (a, b) = scan_util.scan(
+                dbody, x, (params["dense_blocks"], cache[keys[0]], cache[keys[1]]))
+            new_cache[keys[0]], new_cache[keys[1]] = a, b
+
+        keys = ("ckv_m", "krope_m") if cfg.use_mla else ("k_m", "v_m")
+
+        def mbody(x, inp):
+            p, a, b = inp
+            x, a, b = attn_step(p, x, a, b)
+            h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+            y, _ = moe.moe_apply(p["moe"], h[:, None, :], cfg)
+            x = x + y[:, 0]
+            return x, (a, b)
+        x, (a, b) = scan_util.scan(
+            mbody, x, (params["moe_blocks"], cache[keys[0]], cache[keys[1]]))
+        new_cache[keys[0]], new_cache[keys[1]] = a, b
+    elif fam == "ssm":
+        def body(x, inp):
+            p, st, cb = inp
+            h = layers.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+            y, st, cb = ssm.ssm_apply_decode(p["ssm"], h, st, cb, cfg)
+            return x + y, (st, cb)
+        x, (st, cb) = scan_util.scan(
+            body, x, (params["blocks"], cache["state"], cache["conv"]))
+        new_cache.update(state=st, conv=cb)
+    elif fam == "hybrid":
+        def lru_step(p, x, h, cb):
+            u = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+            y, h, cb = rglru.lru_apply_decode(p["lru"], u, h, cb, cfg)
+            x = x + y
+            u = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+            x = x + layers.mlp_apply(p["mlp"], u, cfg)
+            return x, h, cb
+
+        def gbody(x, inp):
+            p, lh, lc, k, v = inp
+            x, h0, c0 = lru_step(p["lru0"], x, lh[0], lc[0])
+            x, h1, c1 = lru_step(p["lru1"], x, lh[1], lc[1])
+            pa = p["attn"]
+            u = layers.rms_norm(x, pa["ln1"]["scale"], cfg.norm_eps)
+            u, k, v = attn.attn_apply_decode(pa["attn"], u, pos, k, v, cfg,
+                                             window=cfg.window)
+            x = x + u
+            u = layers.rms_norm(x, pa["ln2"]["scale"], cfg.norm_eps)
+            x = x + layers.mlp_apply(pa["mlp"], u, cfg)
+            return x, (jnp.stack([h0, h1]), jnp.stack([c0, c1]), k, v)
+        x, (lh, lc, k, v) = scan_util.scan(
+            gbody, x, (params["groups"], cache["lru_h"], cache["lru_conv"],
+                       cache["attn_k"], cache["attn_v"]))
+        new_cache.update(lru_h=lh, lru_conv=lc, attn_k=k, attn_v=v)
+        if "rem_lru" in params:
+            def rbody(x, inp):
+                p, h, cb = inp
+                x, h, cb = lru_step(p, x, h, cb)
+                return x, (h, cb)
+            x, (rh, rc) = scan_util.scan(
+                rbody, x, (params["rem_lru"], cache["rem_lru_h"],
+                           cache["rem_lru_conv"]))
+            new_cache.update(rem_lru_h=rh, rem_lru_conv=rc)
+    elif fam == "encdec":
+        def body(x, inp):
+            p, k, v, ck, cv = inp
+            h = layers.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+            h, k, v = attn.attn_apply_decode(p["self_attn"], h, pos, k, v, cfg)
+            x = x + h
+            h = layers.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+            x = x + attn.cross_attn_decode(p["cross_attn"], h, ck, cv, cfg)
+            h = layers.rms_norm(x, p["ln3"]["scale"], cfg.norm_eps)
+            x = x + layers.mlp_apply(p["mlp"], h, cfg)
+            return x, (k, v)
+        x, (k, v) = scan_util.scan(
+            body, x, (params["dec_blocks"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache.update(self_k=k, self_v=v)
+    else:
+        raise ValueError(fam)
+
+    new_cache["pos"] = pos + 1
+    logits = layers.logits_apply(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,138 @@
+"""Optimizers (optax-like minimal interface, no external deps).
+
+* ``adamw``      — fused AdamW with f32 state.
+* ``adafactor``  — factored second moment for >=2D params (rank-1 row/col
+  statistics): the optimizer-memory story that lets the 671B config fit a
+  pod (DESIGN.md §7).
+* ``warmup_cosine`` schedule + global-norm clipping.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, new_state)
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 200, total: int = 10_000,
+                  floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        z = functools.partial(jnp.zeros_like, dtype=jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        step = step + 1
+        lr = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        upds = jax.tree_util.tree_map(lambda t: t[0], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        return upds, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0):
+    """Factored Adafactor (no first moment) — O(rows+cols) state for
+    matrices instead of O(rows*cols)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return jax.tree_util.tree_map(one, params)
+
+    def update(grads, state, params, step):
+        step = step + 1
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(
+                    vc)[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), ns
+
+        out = jax.tree_util.tree_map(
+            one, grads, state, params,
+            is_leaf=lambda t: isinstance(t, dict) and ("v" in t or "vr" in t))
+        upds = jax.tree_util.tree_map(lambda t: t[0], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        ns = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+        return upds, ns
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr_fn):
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise KeyError(name)

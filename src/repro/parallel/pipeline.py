@@ -1,0 +1,64 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis.
+
+Stages are laid out one per device along ``pipe``; microbatches stream
+through with ``collective_permute`` hops.  The schedule runs
+``n_micro + n_stages - 1`` ticks; each tick every stage processes one
+microbatch (bubbles at the ends, the classic GPipe fill/drain).  Forward
+is differentiable (grad flows through ppermute), so the same wrapper
+trains — used by examples/pipeline_lm.py and tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, mesh, axis: str = "pipe"):
+    """stage_params: pytree stacked on axis0 = n_stages (sharded over pipe).
+    x_micro: (n_micro, mb, ...) replicated input microbatches.
+    Returns (n_micro, mb, ...) outputs (from the last stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def body(local_params, xs):
+        # local_params: (1, ...) this stage's slice; xs: (n_micro, mb, ...)
+        params = jax.tree_util.tree_map(lambda t: t[0], local_params)
+        sid = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        buf = jnp.zeros((n_micro,) + mb_shape, xs.dtype)  # collected outputs
+        cur = jnp.zeros(mb_shape, xs.dtype)
+
+        def tick(t, carry):
+            cur, buf = carry
+            # stage 0 ingests microbatch t (when in range)
+            feed = xs[jnp.clip(t, 0, n_micro - 1)]
+            cur = jnp.where(sid == 0, feed, cur)
+            out = stage_fn(params, cur)
+            # last stage banks its result for microbatch (t - n_stages + 1)
+            mb_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            take = (t - (n_stages - 1) >= 0) & (sid == n_stages - 1)
+            buf = jnp.where(
+                take,
+                jax.lax.dynamic_update_index_in_dim(buf, out, mb_idx, 0),
+                buf)
+            cur = jax.lax.ppermute(out, axis, perm)
+            return cur, buf
+
+        cur, buf = jax.lax.fori_loop(0, ticks, tick, (cur, buf))
+        # broadcast results from the last stage to all (for loss/consumers)
+        buf = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, buf, jnp.zeros_like(buf)), axis)
+        return buf
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(stage_params, x_micro)

@@ -1,0 +1,84 @@
+"""Training step builder: grads (+ optional microbatch accumulation scan),
+global-norm clipping, optimizer update.
+
+The microbatch ``lax.scan`` is also the compute/communication overlap
+vehicle: per-microbatch reduce-scatters are pipelined against the next
+microbatch's backward pass by XLA's latency-hiding scheduler (enabled in
+launch/train.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def init_train_state(cfg, optimizer: Optimizer, rng):
+    params = T.init_params(cfg, rng)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_microbatches(batch, k):
+    from repro.parallel import api as par
+
+    def sp(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        x = x.reshape(k, b // k, *x.shape[1:])
+        return par.shard_activation(x, (None, "dp") + (None,) * (x.ndim - 2))
+
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def make_train_step(cfg, optimizer: Optimizer, *, max_grad_norm: float = 1.0,
+                    microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = T.loss_and_metrics(params, mb, cfg)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc,
+                                               metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "xent": 0.0, "aux": 0.0}
+            m0 = jax.tree_util.tree_map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches,
+                                             metrics)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt = optimizer.update(grads, state["opt"], params,
+                                        state["step"])
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, \
+            metrics
+
+    return train_step

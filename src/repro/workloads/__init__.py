@@ -1,0 +1,20 @@
+"""PrIM-style workload registry (16 workloads, paper Table II)."""
+from repro.workloads.graph import BFS, NW
+from repro.workloads.histo import HST_L, HST_S
+from repro.workloads.linalg import GEMV, MLP, SpMV, TRNS
+from repro.workloads.search import BS, TS
+from repro.workloads.streaming import RED, SCAN_RSS, SCAN_SSA, SEL, UNI, VA
+
+ALL = {
+    w.name: w for w in (
+        BFS(), BS(), GEMV(), HST_L(), HST_S(), MLP(), NW(), RED(),
+        SCAN_RSS(), SCAN_SSA(), SEL(), SpMV(), TRNS(), TS(), UNI(), VA(),
+    )
+}
+
+#: workloads with a direct-addressing (cache-centric) variant for case #4
+CACHEABLE = ("VA", "RED", "BS", "GEMV", "UNI", "SEL")
+
+
+def get(name: str):
+    return ALL[name]

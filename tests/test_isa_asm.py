@@ -1,0 +1,63 @@
+"""Assembler / DSL unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.asm import Program, Reg, TID, ZERO
+from repro.core.isa import Op, assemble
+
+
+def test_label_resolution():
+    p = Program("t", 1)
+    r = p.reg("r")
+    p.label("top")
+    p.add(r, r, 1)
+    p.bne(r, 10, "top")
+    p.stop()
+    b = p.binary(64)
+    # bne emitted as li(AT) + bne
+    assert b.opcode[0] == Op.ADD
+    assert b.imm[2] == 0  # branch target = instruction index of "top"
+    assert b.opcode[2] == Op.BNE
+
+
+def test_undefined_label_raises():
+    p = Program("t", 1)
+    p.jump("nowhere")
+    with pytest.raises(KeyError):
+        p.binary(64)
+
+
+def test_iram_capacity_enforced():
+    """The paper's UPMEM-linker behaviour: programs exceeding IRAM error."""
+    p = Program("big", 1)
+    r = p.reg("r")
+    for _ in range(100):
+        p.add(r, r, 1)
+    with pytest.raises(ValueError):
+        p.binary(64)
+
+
+def test_register_allocator_exhaustion_and_free():
+    p = Program("t", 1)
+    regs = [p.reg(f"r{i}") for i in range(18)]
+    with pytest.raises(RuntimeError):
+        p.reg("overflow")
+    p.free(*regs[:3])
+    a = p.reg("again")
+    assert int(a) in [int(r) for r in regs[:3]]
+
+
+def test_walloc_alignment():
+    p = Program("t", 1)
+    a = p.walloc("a", 5)
+    b = p.walloc("b", 8)
+    assert a % 8 == 0 and b % 8 == 0 and b >= a + 8
+    assert p.symbols["a"] == a
+
+
+def test_stop_padding():
+    p = Program("t", 1)
+    p.nop()
+    b = p.binary(16)
+    assert b.opcode[-1] == Op.STOP  # padded with STOP
+    assert b.n_instrs == 2

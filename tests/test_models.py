@@ -1,0 +1,148 @@
+"""Per-arch smoke tests (reduced configs): forward/train/decode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import get_optimizer, warmup_cosine
+from repro.train import loop as train_loop
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    dc = DataConfig(seq_len=S, global_batch=B, vocab_size=cfg.vocab_size,
+                    seed=0)
+    ds = SyntheticLM(cfg, dc)
+    return {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, None)
+    loss, metrics = T.loss_and_metrics(params, batch, cfg)
+    assert np.isfinite(float(loss)), arch
+    logits, cache = T.prefill(params, batch, cfg)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    opt = get_optimizer(cfg.optimizer, warmup_cosine(1e-3, warmup=2))
+    state = train_loop.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(train_loop.make_train_step(cfg, opt, microbatches=2))
+    batch = _batch(cfg, None)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"])), arch
+    assert int(state["step"]) == 1
+    for leaf in jax.tree_util.tree_leaves(state["params"]):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-130m",
+                                  "recurrentgemma-9b", "deepseek-v3-671b",
+                                  "seamless-m4t-large-v2"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill(t0..tn) + decode == full forward logits at the last position —
+    validates every cache layout exactly."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, None)
+    tokens = batch["tokens"]
+
+    logits_pf, cache = T.prefill(params, batch, cfg)
+
+    # teacher-forced reference: hidden of the full sequence
+    if cfg.family == "encdec":
+        # decode stream is [BOS, t0..t_{S-2}] (prefill consumed BOS)
+        bos = jnp.zeros((B, 1), jnp.int32)
+        dec_seq = jnp.concatenate([bos, tokens[:, :-1]], axis=1)
+        hidden, _ = T.forward_hidden(params, None, cfg,
+                                     frames=batch["frames"],
+                                     tgt_tokens=dec_seq)
+    elif cfg.family == "vlm":
+        hidden, _ = T.forward_hidden(params, tokens, cfg,
+                                     patches=batch["patches"])
+    else:
+        hidden, _ = T.forward_hidden(params, tokens, cfg)
+    from repro.models import layers
+    ref_logits = layers.logits_apply(params, hidden[:, -1], cfg)
+
+    if cfg.family == "encdec":
+        # prefill ran BOS (pos 0); feed t0..t_{S-2} to reach position S-1
+        logits = logits_pf
+        for t in range(tokens.shape[1] - 1):
+            logits, cache = T.decode_step(params, cache, tokens[:, t], cfg)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref_logits), rtol=2e-3,
+                                   atol=2e-3)
+    else:
+        np.testing.assert_allclose(np.asarray(logits_pf),
+                                   np.asarray(ref_logits), rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_decode_continues_prefill():
+    """Decode after prefill == teacher-forced logits at position S."""
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :S])}
+    _, cache = T.prefill(params, batch, cfg)
+    # pad cache capacity for one more token
+    cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+                 if hasattr(v, "ndim") and v.ndim == 5 else v)
+             for k, v in cache.items()}
+    logits, _ = T.decode_step(params, cache, jnp.asarray(toks[:, S]), cfg)
+    hidden, _ = T.forward_hidden(params, jnp.asarray(toks), cfg)
+    from repro.models import layers
+    ref = layers.logits_apply(params, hidden[:, -1], cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_loss_decreases_quickstart():
+    """A tiny model on the synthetic bigram corpus must learn."""
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    opt = get_optimizer("adamw", warmup_cosine(3e-3, warmup=5, total=60))
+    state = train_loop.init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(train_loop.make_train_step(cfg, opt))
+    dc = DataConfig(seq_len=64, global_batch=8, vocab_size=cfg.vocab_size)
+    ds = SyntheticLM(cfg, dc)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_param_count_vs_actual():
+    """Analytic param_count (roofline MODEL_FLOPS) matches actual trees."""
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        params = jax.eval_shape(
+            lambda c=cfg: T.init_params(c, jax.random.PRNGKey(0)))
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.25, (
+            arch, actual, analytic)
+
+
+def test_grid_covers_40_cells():
+    from repro.configs.base import grid
+    cells = list(grid())
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(skipped) == 8  # long_500k on 8 full-attention archs
+    assert all(s[1] == "long_500k" for s in skipped)

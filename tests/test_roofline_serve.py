@@ -1,0 +1,72 @@
+"""Roofline HLO parsing + serving engine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config, get_smoke_config
+from repro.launch import roofline
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+HLO = """
+ENTRY main {
+  %p = bf16[1024,512]{1,0} parameter(0)
+  %ar = bf16[1024,512]{1,0} all-reduce(%p), replica_groups={}
+  %ag.1 = f32[64,2048]{1,0} all-gather(%x), dimensions={0}
+  %t = (f32[8,128]{1,0}, f32[4]{0}) all-to-all(%a, %b)
+  %cp = u8[100]{0} collective-permute(%c)
+  %rs-start = bf16[256]{0} reduce-scatter-start(%d)
+  %dot = f32[16,16]{1,0} dot(%e, %f)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    got = roofline.collective_bytes(HLO)
+    assert got["all-reduce"] == 1024 * 512 * 2
+    assert got["all-gather"] == 64 * 2048 * 4
+    assert got["all-to-all"] == 8 * 128 * 4 + 4 * 4
+    assert got["collective-permute"] == 100
+    assert got["reduce-scatter"] == 256 * 2
+
+
+def test_shape_bytes_tuple_and_scalar():
+    assert roofline._shape_bytes("(f32[2,3], bf16[4])") == 24 + 8
+    assert roofline._shape_bytes("pred[]") == 1
+
+
+def test_model_flops_scaling():
+    cfg = get_config("llama3-8b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"], "train")
+    de = roofline.model_flops(cfg, SHAPES["decode_32k"], "decode")
+    n = cfg.param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+    assert abs(de - 2 * n * 128) / de < 1e-6
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.param_count(active_only=True) < 0.25 * cfg.param_count()
+
+
+def test_param_counts_match_published():
+    """Sanity: analytic totals land near the nameplate sizes."""
+    expect = {"llama3-8b": 8.0e9, "yi-34b": 34.4e9,
+              "deepseek-v3-671b": 671e9, "qwen3-moe-30b-a3b": 30.5e9,
+              "recurrentgemma-9b": 9.2e9, "mamba2-130m": 0.13e9}
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.2, (arch, got, want)
+
+
+def test_serve_engine_batched():
+    cfg = get_smoke_config("llama3-8b").replace(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=2, capacity=64)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(0, cfg.vocab_size, 5), max_new=4)
+            for _ in range(4)]
+    outs = eng.run()
+    assert set(outs) == set(rids)
+    assert all(len(v) == 4 for v in outs.values())
+    assert all(0 <= t < cfg.vocab_size for v in outs.values() for t in v)

@@ -1,0 +1,68 @@
+"""PrIM workload suite: functional correctness vs numpy oracles."""
+import numpy as np
+import pytest
+
+import repro.workloads as wl
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+
+FAST = ["VA", "RED", "SCAN-SSA", "SCAN-RSS", "SEL", "UNI", "HST-S", "HST-L",
+        "BS", "TS", "GEMV", "TRNS", "SpMV", "MLP"]
+MULTIK = ["BFS", "NW"]
+
+
+@pytest.mark.parametrize("name", FAST)
+def test_workload_correct_8t(name):
+    cfg = DPUConfig(n_dpus=2, n_tasklets=8, mram_bytes=1 << 21)
+    sys_ = PIMSystem(cfg)
+    st, rep = wl.get(name).run(sys_, n_threads=8, scale=0.03)
+    assert rep.cycles > 0 and rep.issued > 0
+    # cycle accounting closes (per-DPU finish times may differ slightly)
+    tot = rep.active_cycles + rep.idle_mem + rep.idle_rev + rep.idle_rf
+    assert tot == int(np.asarray(st["cycle"]).sum())
+
+
+@pytest.mark.parametrize("name", ["VA", "RED", "BS"])
+def test_workload_correct_1t(name):
+    cfg = DPUConfig(n_dpus=1, n_tasklets=1, mram_bytes=1 << 21)
+    sys_ = PIMSystem(cfg)
+    st, rep = wl.get(name).run(sys_, n_threads=1, scale=0.03)
+    # 1 thread: the revolver dominates (paper Fig. 6 leftmost bars)
+    assert rep.breakdown["idle_revolver"] > 0.3
+
+
+@pytest.mark.parametrize("name", MULTIK)
+def test_multikernel_workloads(name):
+    cfg = DPUConfig(n_dpus=2, n_tasklets=8, mram_bytes=1 << 21)
+    sys_ = PIMSystem(cfg)
+    st, rep = wl.get(name).run(sys_, n_threads=8, scale=0.08)
+    assert sys_.timeline.inter_dpu > 0  # host-bounced communication counted
+
+
+def test_more_threads_not_slower():
+    cfg = DPUConfig(n_dpus=1, n_tasklets=16, mram_bytes=1 << 21)
+    c = {}
+    for nt in (1, 4, 16):
+        sys_ = PIMSystem(cfg)
+        _, rep = wl.get("VA").run(sys_, n_threads=nt, scale=0.05)
+        c[nt] = rep.cycles
+    assert c[4] < c[1] and c[16] <= c[4] * 1.2
+
+
+def test_strong_scaling_dpus():
+    cycles = {}
+    for d in (1, 4):
+        cfg = DPUConfig(n_dpus=d, n_tasklets=8, mram_bytes=1 << 21)
+        sys_ = PIMSystem(cfg)
+        # same TOTAL work split across DPUs (strong scaling)
+        _, rep = wl.get("RED").run(sys_, n_threads=8, scale=0.2 / d)
+        cycles[d] = rep.cycles
+    assert cycles[4] < cycles[1] / 2.0
+
+
+def test_sync_heavy_workloads_have_sync_mix():
+    cfg = DPUConfig(n_dpus=1, n_tasklets=8, mram_bytes=1 << 21)
+    sys_ = PIMSystem(cfg)
+    _, rep = wl.get("HST-L").run(sys_, n_threads=8, scale=0.03)
+    assert rep.instr_mix["sync"] > 0.01
+    assert rep.acq_retry >= 0
