@@ -25,7 +25,7 @@ def main() -> None:
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
     args = ap.parse_args()
 
-    from benchmarks import lm_roofline, pim_figs
+    from benchmarks import comm_scaling, lm_roofline, pim_figs
 
     char = None
 
@@ -42,6 +42,8 @@ def main() -> None:
         "fig8_tlp_ts": lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale),
         "fig9_instr_mix": lambda: pim_figs.fig9_instr_mix(need_char(), args.scale),
         "fig10_scaling": lambda: pim_figs.fig10_strong_scaling(args.scale),
+        "comm_scaling": lambda: comm_scaling.comm_strong_scaling(args.scale),
+        "comm_micro": lambda: comm_scaling.collective_microbench(args.scale),
         "fig11_simt": lambda: pim_figs.fig11_simt(args.scale),
         "fig12_ilp": lambda: pim_figs.fig12_ilp(args.scale),
         "fig13_mram_bw": lambda: pim_figs.fig13_mram_bw(args.scale),

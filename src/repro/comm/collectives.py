@@ -1,0 +1,138 @@
+"""Byte-accurate inter-DPU collectives over per-DPU MRAM images.
+
+Every primitive physically moves numpy payloads between the rows of a
+``(D, mram_words)`` int32 image (row d = DPU d's bank) *and* charges the
+modeled transfer time of the system's fabric backend to the timeline's
+``inter_dpu`` phase. Host-bounce and direct-fabric backends move the
+same bytes — only the charged seconds differ — so workload outputs are
+backend-independent by construction.
+
+Offsets and counts are in 32-bit words, matching the engine's MRAM view.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+OPS: Dict[str, Callable] = {
+    "sum": np.add,
+    "max": np.maximum,
+    "min": np.minimum,
+    "or": np.bitwise_or,
+    "and": np.bitwise_and,
+}
+
+
+def _charge(system, kind: str, seconds: float, nbytes: float):
+    system.timeline.add("inter_dpu", seconds, label=kind, nbytes=nbytes)
+
+
+def _check_region(mram, off: int, n: int):
+    # numpy slicing would silently truncate; fail loudly instead so a
+    # miscomputed offset can't move less data than the charged time claims
+    if off < 0 or n < 0 or off + n > mram.shape[1]:
+        raise ValueError(f"region [{off}, {off + n}) outside image of "
+                         f"{mram.shape[1]} words")
+
+
+def _reduce_rows(mram, off: int, n: int, op: str) -> np.ndarray:
+    try:
+        ufunc = OPS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduce op {op!r} (want {sorted(OPS)})")
+    return ufunc.reduce(mram[:, off:off + n], axis=0)
+
+
+def broadcast(system, mram: np.ndarray, off: int, n: int, root: int = 0):
+    """Replicate ``n`` words at ``off`` from DPU ``root`` to all DPUs."""
+    _check_region(mram, off, n)
+    D = mram.shape[0]
+    mram[:, off:off + n] = mram[root, off:off + n]
+    if D > 1:
+        _charge(system, "broadcast",
+                system.fabric.broadcast(4.0 * n, root), 4.0 * n * (D - 1))
+
+
+def scatter(system, mram: np.ndarray, src_off: int, dst_off: int,
+            n_per_dpu: int, root: int = 0):
+    """Split ``D * n_per_dpu`` words at ``src_off`` on ``root`` into
+    per-DPU shards of ``n_per_dpu`` words at ``dst_off``."""
+    D = mram.shape[0]
+    _check_region(mram, src_off, D * n_per_dpu)
+    _check_region(mram, dst_off, n_per_dpu)
+    src = mram[root, src_off:src_off + D * n_per_dpu].copy()
+    for d in range(D):
+        mram[d, dst_off:dst_off + n_per_dpu] = \
+            src[d * n_per_dpu:(d + 1) * n_per_dpu]
+    if D > 1:
+        _charge(system, "scatter",
+                system.fabric.scatter(4.0 * n_per_dpu, root),
+                4.0 * n_per_dpu * (D - 1))
+
+
+def gather(system, mram: np.ndarray, src_off: int, dst_off: int,
+           n_per_dpu: int, root: int = 0):
+    """Concatenate each DPU's ``n_per_dpu``-word shard at ``src_off``
+    into ``D * n_per_dpu`` words at ``dst_off`` on ``root``."""
+    D = mram.shape[0]
+    _check_region(mram, src_off, n_per_dpu)
+    _check_region(mram, dst_off, D * n_per_dpu)
+    shards = mram[:, src_off:src_off + n_per_dpu].copy()
+    mram[root, dst_off:dst_off + D * n_per_dpu] = shards.reshape(-1)
+    if D > 1:
+        _charge(system, "gather",
+                system.fabric.gather(4.0 * n_per_dpu, root),
+                4.0 * n_per_dpu * (D - 1))
+
+
+def reduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
+           root: int = 0):
+    """Combine ``n`` words at ``off`` across DPUs onto ``root``."""
+    _check_region(mram, off, n)
+    D = mram.shape[0]
+    mram[root, off:off + n] = _reduce_rows(mram, off, n, op)
+    if D > 1:
+        _charge(system, "reduce",
+                system.fabric.reduce(4.0 * n, root), 4.0 * n * D)
+
+
+def allreduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum"):
+    """Combine ``n`` words at ``off`` across DPUs; all DPUs get the result."""
+    _check_region(mram, off, n)
+    D = mram.shape[0]
+    mram[:, off:off + n] = _reduce_rows(mram, off, n, op)[None, :]
+    if D > 1:
+        # nbytes counts one direction's payload, like every other primitive
+        _charge(system, "allreduce",
+                system.fabric.allreduce(4.0 * n), 4.0 * n * D)
+
+
+def allgather(system, mram: np.ndarray, src_off: int, dst_off: int,
+              n_per_dpu: int):
+    """Every DPU ends with the concatenation of all shards at ``dst_off``."""
+    D = mram.shape[0]
+    _check_region(mram, src_off, n_per_dpu)
+    _check_region(mram, dst_off, D * n_per_dpu)
+    flat = mram[:, src_off:src_off + n_per_dpu].copy().reshape(-1)
+    mram[:, dst_off:dst_off + D * n_per_dpu] = flat[None, :]
+    if D > 1:
+        _charge(system, "allgather",
+                system.fabric.allgather(4.0 * n_per_dpu),
+                4.0 * n_per_dpu * D * (D - 1))
+
+
+def alltoall(system, mram: np.ndarray, src_off: int, dst_off: int,
+             n_per_pair: int):
+    """Transpose: DPU d's j-th ``n_per_pair``-word block goes to DPU j's
+    d-th block (src and dst regions are ``D * n_per_pair`` words)."""
+    D = mram.shape[0]
+    _check_region(mram, src_off, D * n_per_pair)
+    _check_region(mram, dst_off, D * n_per_pair)
+    blocks = mram[:, src_off:src_off + D * n_per_pair].copy()
+    blocks = blocks.reshape(D, D, n_per_pair).transpose(1, 0, 2)
+    mram[:, dst_off:dst_off + D * n_per_pair] = blocks.reshape(D, -1)
+    if D > 1:
+        _charge(system, "alltoall",
+                system.fabric.alltoall(4.0 * n_per_pair),
+                4.0 * n_per_pair * D * (D - 1))

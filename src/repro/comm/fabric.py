@@ -1,0 +1,203 @@
+"""Inter-DPU communication backends.
+
+Each collective has two pluggable time models:
+
+* :class:`HostBounceFabric` — today's UPMEM path (paper §II-B): every
+  DPU-to-DPU byte is read back to the CPU over the slow host-read path
+  and re-written over the host-write path, scheduled through the
+  :class:`~repro.comm.topology.RankTopology` (serialized within a
+  channel, overlapped across channels, asymmetric directions).
+* :class:`DirectFabric` — the paper's pathfinding hypothesis: a
+  PIM-PIM interconnect with one ``link_gbps`` full-duplex link per DPU
+  and a per-hop ``latency_s``. Collective times use the standard
+  link-bottleneck closed forms (binomial-tree broadcast, ring
+  all-reduce / all-gather, pairwise all-to-all); the host is not
+  involved at all.
+
+All methods return modeled *seconds* for D DPUs; the actual payload
+movement happens in :mod:`repro.comm.collectives`, identically for both
+backends — only the charged time differs.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.comm.topology import D2H, H2D, RankTopology
+
+
+class Fabric:
+    name = "?"
+
+    # every method takes total/shard *bytes* and returns seconds
+    def bounce(self, per_dpu_bytes: float) -> float:
+        """Legacy producer->consumer exchange of ``per_dpu_bytes`` each."""
+        raise NotImplementedError
+
+    def broadcast(self, n_bytes: float, root: int = 0) -> float:
+        raise NotImplementedError
+
+    def scatter(self, shard_bytes: float, root: int = 0) -> float:
+        raise NotImplementedError
+
+    def gather(self, shard_bytes: float, root: int = 0) -> float:
+        raise NotImplementedError
+
+    def reduce(self, n_bytes: float, root: int = 0) -> float:
+        raise NotImplementedError
+
+    def allreduce(self, n_bytes: float) -> float:
+        raise NotImplementedError
+
+    def allgather(self, shard_bytes: float) -> float:
+        raise NotImplementedError
+
+    def alltoall(self, pair_bytes: float) -> float:
+        raise NotImplementedError
+
+
+class HostBounceFabric(Fabric):
+    """DPU -> CPU -> DPU, scheduled on the rank/channel topology."""
+
+    name = "host"
+
+    def __init__(self, topology: RankTopology):
+        self.topology = topology
+
+    @property
+    def n_dpus(self) -> int:
+        return self.topology.n_dpus
+
+    def _sched(self, vec, direction) -> float:
+        return self.topology.schedule(vec, direction).seconds
+
+    def _vec(self, fill=0.0):
+        return np.full(self.n_dpus, fill, np.float64)
+
+    def bounce(self, per_dpu_bytes: float) -> float:
+        return (self._sched(per_dpu_bytes, D2H)
+                + self._sched(per_dpu_bytes, H2D))
+
+    def broadcast(self, n_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        up = self._vec()
+        up[root] = n_bytes                  # host reads the source once
+        down = self._vec(n_bytes)
+        down[root] = 0.0                    # root already holds the payload
+        return self._sched(up, D2H) + self._sched(down, H2D)
+
+    def scatter(self, shard_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        up = self._vec()
+        up[root] = (self.n_dpus - 1) * shard_bytes  # serialized host-read
+        down = self._vec(shard_bytes)
+        down[root] = 0.0
+        return self._sched(up, D2H) + self._sched(down, H2D)
+
+    def gather(self, shard_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        up = self._vec(shard_bytes)
+        up[root] = 0.0
+        down = self._vec()
+        down[root] = (self.n_dpus - 1) * shard_bytes
+        return self._sched(up, D2H) + self._sched(down, H2D)
+
+    def reduce(self, n_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        down = self._vec()
+        down[root] = n_bytes
+        # the CPU must read every contribution (root's included) to combine
+        return self._sched(n_bytes, D2H) + self._sched(down, H2D)
+
+    def allreduce(self, n_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        return self._sched(n_bytes, D2H) + self._sched(n_bytes, H2D)
+
+    def allgather(self, shard_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        other = (self.n_dpus - 1) * shard_bytes
+        return self._sched(shard_bytes, D2H) + self._sched(other, H2D)
+
+    def alltoall(self, pair_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        other = (self.n_dpus - 1) * pair_bytes
+        return self._sched(other, D2H) + self._sched(other, H2D)
+
+
+class DirectFabric(Fabric):
+    """Hypothetical PIM-PIM fabric: per-DPU link, host never touched."""
+
+    name = "direct"
+
+    def __init__(self, n_dpus: int, link_gbps: float = 1.0,
+                 latency_s: float = 1e-7):
+        if link_gbps <= 0:
+            raise ValueError("link_gbps must be > 0")
+        self.n_dpus = n_dpus
+        self.bw = link_gbps * 1e9
+        self.lat = latency_s
+
+    def _t(self, link_bytes: float, hops: int) -> float:
+        return link_bytes / self.bw + hops * self.lat
+
+    def bounce(self, per_dpu_bytes: float) -> float:
+        return self._t(per_dpu_bytes, 1)
+
+    def broadcast(self, n_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        # pipelined binomial tree: each link forwards the full payload once
+        return self._t(n_bytes, math.ceil(math.log2(self.n_dpus)))
+
+    def scatter(self, shard_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        return self._t((self.n_dpus - 1) * shard_bytes, 1)  # root link bound
+
+    def gather(self, shard_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        return self._t((self.n_dpus - 1) * shard_bytes, 1)
+
+    def reduce(self, n_bytes: float, root: int = 0) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        # ring reduce-scatter, then shards converge on the root's link
+        D = self.n_dpus
+        return self._t(2 * (D - 1) / D * n_bytes, D)
+
+    def allreduce(self, n_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        D = self.n_dpus
+        return self._t(2 * (D - 1) / D * n_bytes, 2 * (D - 1))
+
+    def allgather(self, shard_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        D = self.n_dpus
+        return self._t((D - 1) * shard_bytes, D - 1)
+
+    def alltoall(self, pair_bytes: float) -> float:
+        if self.n_dpus == 1:
+            return 0.0
+        D = self.n_dpus
+        return self._t((D - 1) * pair_bytes, D - 1)
+
+
+def make_fabric(cfg, topology: RankTopology) -> Fabric:
+    """Build the fabric selected by ``cfg.fabric``."""
+    if cfg.fabric == "host":
+        return HostBounceFabric(topology)
+    if cfg.fabric == "direct":
+        return DirectFabric(topology.n_dpus, link_gbps=cfg.pim_link_gbps,
+                            latency_s=cfg.pim_link_latency_us * 1e-6)
+    raise ValueError(f"unknown fabric {cfg.fabric!r} (want 'host'|'direct')")

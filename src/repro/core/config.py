@@ -38,6 +38,21 @@ class DPUConfig:
     h2d_gbps_per_dpu: float = 0.296
     d2h_gbps_per_dpu: float = 0.063
 
+    # ----- host interconnect topology (repro.comm, §II-B / Fig. 10) ----------
+    # DPUs split contiguously across ranks; ranks round-robin over memory
+    # channels. Transfers serialize between ranks sharing a channel and
+    # overlap across channels.
+    n_ranks: int = 1
+    n_channels: int = 1
+
+    # ----- inter-DPU fabric (pathfinding case study) --------------------------
+    # "host": DPU->CPU->DPU bounce (today's hardware, §II-B)
+    # "direct": hypothetical PIM-PIM interconnect (the paper's pathfinding
+    #           hypothesis) with per-DPU link bandwidth + per-hop latency
+    fabric: str = "host"
+    pim_link_gbps: float = 1.0
+    pim_link_latency_us: float = 0.1
+
     # ----- case study #2: ILP features (additive D/R/S/F) --------------------
     forwarding: bool = False            # (D) data forwarding
     unified_rf: bool = False            # (R) merged odd/even RF, 2x read bw

@@ -1,23 +1,30 @@
 """Host-side runtime: the analogue of UPMEM's host API
 (``dpu_alloc`` / ``dpu_load`` / ``dpu_push_xfer`` / ``dpu_launch``).
 
-The CPU<->DPU channel is the paper's fixed-bandwidth model (Table I,
-asymmetric AVX write/read paths); transfers to distinct DPUs proceed in
-parallel, so transfer latency = max-per-DPU-bytes / per-DPU-bandwidth —
-the behaviour behind Fig. 10's strong-scaling communication bars.
-Inter-DPU communication must bounce through the host (paper §II-B).
+All host<->DPU transfers are scheduled through the ``repro.comm``
+interconnect model (channels x ranks x DPUs): parallel across DPUs
+within a rank, serialized between ranks sharing a channel, overlapped
+across channels, asymmetric AVX write/read paths (Table I) — the
+behaviour behind Fig. 10's strong-scaling communication bars.
+Inter-DPU communication goes through the system's fabric backend:
+host-bounce (paper §II-B) or a hypothetical direct PIM-PIM fabric
+(pathfinding case study).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.comm.fabric import Fabric, make_fabric
+from repro.comm.topology import RankTopology
 from repro.core import engine, simt, stats
 from repro.core.asm import ARG_BYTES, CACHE_DATA_BASE, Program
 from repro.core.config import DPUConfig
 from repro.core.isa import Binary
+
+PHASES = ("h2d", "kernel", "d2h", "inter_dpu")
 
 
 @dataclass
@@ -27,7 +34,16 @@ class Timeline:
     h2d: float = 0.0
     kernel: float = 0.0
     d2h: float = 0.0
-    inter_dpu: float = 0.0  # DPU->CPU->DPU bounces between kernels
+    inter_dpu: float = 0.0  # inter-DPU exchanges between kernels
+    #: per-event attribution: (phase, label, seconds, bytes)
+    events: List[Tuple[str, str, float, float]] = field(default_factory=list)
+
+    def add(self, phase: str, seconds: float, label: str = "",
+            nbytes: float = 0.0):
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r}")
+        setattr(self, phase, getattr(self, phase) + seconds)
+        self.events.append((phase, label or phase, seconds, nbytes))
 
     @property
     def total(self) -> float:
@@ -38,27 +54,43 @@ class Timeline:
         return {"kernel": self.kernel / t, "h2d": self.h2d / t,
                 "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t}
 
+    def by_label(self, phase: str) -> Dict[str, float]:
+        """Seconds per event label within one phase (e.g. per-collective)."""
+        out: Dict[str, float] = {}
+        for ph, label, sec, _ in self.events:
+            if ph == phase:
+                out[label] = out.get(label, 0.0) + sec
+        return out
+
 
 class PIMSystem:
-    """A rank of DPUs + the host runtime."""
+    """Channels x ranks x DPUs + the host runtime."""
 
-    def __init__(self, cfg: DPUConfig):
+    def __init__(self, cfg: DPUConfig, fabric: Optional[Fabric] = None):
         self.cfg = cfg
+        self.topology = RankTopology.from_config(cfg)
+        self.fabric = fabric or make_fabric(cfg, self.topology)
         self.timeline = Timeline()
         self.reports = []
 
     # ---- transfer accounting -------------------------------------------------
-    def h2d(self, bytes_per_dpu: float):
-        self.timeline.h2d += bytes_per_dpu / (self.cfg.h2d_gbps_per_dpu * 1e9)
+    def h2d(self, bytes_per_dpu, label: str = "h2d"):
+        """Host write; scalar or (D,) per-DPU byte vector."""
+        ev = self.topology.schedule(bytes_per_dpu, "h2d")
+        self.timeline.add("h2d", ev.seconds, label, ev.total_bytes)
 
-    def d2h(self, bytes_per_dpu: float):
-        self.timeline.d2h += bytes_per_dpu / (self.cfg.d2h_gbps_per_dpu * 1e9)
+    def d2h(self, bytes_per_dpu, label: str = "d2h"):
+        """Host read; scalar or (D,) per-DPU byte vector."""
+        ev = self.topology.schedule(bytes_per_dpu, "d2h")
+        self.timeline.add("d2h", ev.seconds, label, ev.total_bytes)
 
     def inter_dpu(self, bytes_per_dpu: float):
-        """Producer DPU -> CPU -> consumer DPU bounce."""
-        self.timeline.inter_dpu += (
-            bytes_per_dpu / (self.cfg.d2h_gbps_per_dpu * 1e9)
-            + bytes_per_dpu / (self.cfg.h2d_gbps_per_dpu * 1e9))
+        """Legacy host bounce: ``bytes_per_dpu`` is the worst-case per-DPU
+        payload, scheduled on every DPU (so time scales with ranks per
+        channel). Prefer the ``repro.comm`` collectives, which account
+        exact per-DPU vectors."""
+        self.timeline.add("inter_dpu", self.fabric.bounce(bytes_per_dpu),
+                          "bounce", bytes_per_dpu)
 
     # ---- kernel launch ---------------------------------------------------------
     def launch(self, name: str, binary: Binary, args: np.ndarray,
@@ -91,7 +123,7 @@ class PIMSystem:
                 f"{name}: kernel hit max_cycles={cfg.max_cycles} "
                 f"(status={np.unique(st['status'])})")
         rep = stats.report_from_state(name, cfg, st, T)
-        self.timeline.kernel += rep.kernel_seconds
+        self.timeline.add("kernel", rep.kernel_seconds, name)
         self.reports.append(rep)
         return st, rep
 

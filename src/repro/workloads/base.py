@@ -73,10 +73,15 @@ class Workload:
             st, rep = system.launch(self.name, binary, hd.args, hd.mram,
                                     n_threads=n_threads)
             mem = np.asarray(st["mram"])
-        system.d2h(hd.d2h_bytes)
         if not hd.check(mem):
             raise AssertionError(f"{self.name}: output mismatch vs oracle")
+        self.readback(system, hd, mem)
         return st, rep
+
+    def readback(self, system: PIMSystem, hd: HostData, mem: np.ndarray):
+        """Post-kernel epilogue: charge the host readback. Subclasses may
+        first merge inter-DPU state through ``repro.comm`` collectives."""
+        system.d2h(hd.d2h_bytes)
 
 
 # ---------------------------------------------------------------------------

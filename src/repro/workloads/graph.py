@@ -1,14 +1,17 @@
 """Graph / DP workloads: BFS (multi-kernel, host-bounced frontiers) and
 NW (Needleman-Wunsch wavefront DP).
 
-Both exercise the paper's inter-DPU communication path: DPUs cannot talk to
-each other, so per-iteration shared state (BFS frontiers / NW block
-boundaries) bounces DPU -> CPU -> DPU between kernel launches (§II-B,
-Fig. 10's sub-linear scalers)."""
+Both exercise the paper's inter-DPU communication path: per-iteration
+shared state (BFS frontiers / NW block boundaries) crosses DPUs between
+kernel launches (§II-B, Fig. 10's sub-linear scalers). BFS routes its
+frontier/dist merge through ``repro.comm`` allreduce collectives, so the
+exchange is host-bounced or direct-fabric depending on the system's
+configured backend."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.comm import collectives
 from repro.core.asm import N_TASKLETS, Program, Reg, TID, ZERO
 from repro.core.host import PIMSystem, merge_reports
 from repro.workloads.base import BLK, HostData, Workload
@@ -219,16 +222,20 @@ class BFS(Workload):
             args = np.zeros((D, 9), np.int32)
             for d in range(D):
                 args[d] = [pad, level, op, oa, od, oc, on, *ranges[d]]
-            system.inter_dpu(4 * 2 * V)  # frontier + dist redistribution
             st, rep = system.launch("BFS", binary, args, mram,
                                     n_threads=n_threads)
             reps.append(rep)
             out = np.asarray(st["mram"])
-            dists = out[:, od // 4: od // 4 + V]
-            nxts = out[:, on // 4: on // 4 + V]
-            # host merge
-            dist = dists.max(0)  # unvisited = -1; visited wins
-            cur = (nxts != 0).any(0).astype(np.int32)
+            # inter-DPU merge through the comm fabric: every DPU ends up
+            # with the merged dist (max; unvisited = -1, visited wins) and
+            # the union of next-frontiers (bitwise or); only the dist|next
+            # slices are exchanged, not the whole bank image
+            sl = np.concatenate([out[:, od // 4: od // 4 + V],
+                                 out[:, on // 4: on // 4 + V]], axis=1)
+            collectives.allreduce(system, sl, 0, V, op="max")
+            collectives.allreduce(system, sl, V, V, op="or")
+            dist = sl[0, :V].copy()
+            cur = (sl[0, V:] != 0).astype(np.int32)
             if cur.sum() == 0 or level > V:
                 break
             level += 1

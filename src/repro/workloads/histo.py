@@ -1,8 +1,13 @@
-"""Histogram workloads: HST-S (private per-tasklet) and HST-L (shared, mutex)."""
+"""Histogram workloads: HST-S (private per-tasklet) and HST-L (shared, mutex).
+
+After the kernel, the per-DPU histograms are merged into one global
+histogram on DPU 0 through a ``repro.comm`` sum-reduce — the inter-DPU
+exchange that real PrIM histograms do on the host (paper §II-B)."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.comm import collectives
 from repro.core.asm import N_TASKLETS, Program, Reg, TID, ZERO
 from repro.workloads.base import BLK, HostData, Workload
 from repro.workloads.streaming import _min_imm, _mk_mram, _slice_regs
@@ -178,7 +183,28 @@ class _HistBase(Workload):
                                   want.astype(np.int32))
 
         return HostData(args, img, h2d_bytes=4 * n, d2h_bytes=4 * N_BINS,
-                        check=check)
+                        check=check,
+                        extra={"hist_off": oo // 4,
+                               "want_merged": want.sum(0).astype(np.int32)})
+
+    def readback(self, system, hd, mem):
+        # Merge the per-DPU histograms onto DPU 0 through the comm fabric,
+        # modeled on a host-side shadow of the banks (engine state is
+        # read-only once returned). The charged time is the full collective
+        # — including the write-back leg that lands the merged result in
+        # DPU 0's MRAM — so host-bounce and direct fabrics satisfy the
+        # same contract; a host that only wanted the histogram on the CPU
+        # could skip that leg, but then the comparison would be unfair to
+        # the direct fabric.
+        off = hd.extra["hist_off"]
+        hist = np.array(mem[:, off:off + N_BINS])  # writable shadow
+        collectives.reduce(system, hist, 0, N_BINS, op="sum", root=0)
+        if not np.array_equal(hist[0], hd.extra["want_merged"]):
+            raise AssertionError(f"{self.name}: merged histogram mismatch")
+        # the host reads back only the merged histogram, from DPU 0
+        final = np.zeros(system.cfg.n_dpus)
+        final[0] = 4.0 * N_BINS
+        system.d2h(final)
 
 
 class HST_S(_HistBase):

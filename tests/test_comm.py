@@ -1,0 +1,238 @@
+"""repro.comm: scheduler invariants, collective data correctness vs numpy
+oracles, and modeled time vs closed-form expectations for both backends."""
+import numpy as np
+import pytest
+
+import repro.comm as comm
+from repro.comm.fabric import DirectFabric, HostBounceFabric
+from repro.comm.topology import RankTopology
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+
+H2D_BW = DPUConfig().h2d_gbps_per_dpu * 1e9
+D2H_BW = DPUConfig().d2h_gbps_per_dpu * 1e9
+
+
+# ---------------------------------------------------------------------------
+# topology scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_single_rank_matches_legacy_model():
+    t = RankTopology(n_dpus=8)
+    ev = t.schedule(1e6, "h2d")
+    assert ev.seconds == pytest.approx(1e6 / H2D_BW)
+    assert ev.total_bytes == 8e6
+
+
+def test_channel_serialization():
+    # two ranks on ONE channel serialize: 2x the one-rank time
+    one = RankTopology(n_dpus=8, n_ranks=1, n_channels=1)
+    two = RankTopology(n_dpus=8, n_ranks=2, n_channels=1)
+    assert two.schedule(1e6, "h2d").seconds == \
+        pytest.approx(2 * one.schedule(1e6, "h2d").seconds)
+
+
+def test_cross_channel_overlap():
+    # two ranks on TWO channels overlap: same elapsed as one rank
+    two_ch = RankTopology(n_dpus=8, n_ranks=2, n_channels=2)
+    ev = two_ch.schedule(1e6, "h2d")
+    assert ev.seconds == pytest.approx(1e6 / H2D_BW)
+    assert ev.channel_busy == (ev.seconds, ev.seconds)
+
+
+def test_read_write_asymmetry():
+    t = RankTopology(n_dpus=4)
+    assert t.schedule(1e6, "d2h").seconds > 3 * t.schedule(1e6, "h2d").seconds
+
+
+def test_per_dpu_vector_uses_rank_max():
+    t = RankTopology(n_dpus=4, n_ranks=2, n_channels=1)
+    # rank 0: {100, 900} -> 900; rank 1: {200, 400} -> 400; serialized
+    ev = t.schedule([100, 900, 200, 400], "h2d")
+    assert ev.seconds == pytest.approx((900 + 400) / H2D_BW)
+    assert ev.total_bytes == 1600
+
+
+def test_placement_helpers():
+    t = RankTopology(n_dpus=8, n_ranks=4, n_channels=2)
+    assert [t.rank_of(d) for d in range(8)] == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert t.ranks_on_channel(0) == [0, 2]
+    assert t.ranks_on_channel(1) == [1, 3]
+    assert t.channel_of_rank(3) == 1
+    assert t.dpu_slice(2) == slice(4, 6)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        RankTopology(n_dpus=2, n_ranks=4)
+    with pytest.raises(ValueError):
+        RankTopology(n_dpus=6, n_ranks=4)  # uneven split -> empty rank
+    with pytest.raises(ValueError):
+        RankTopology(n_dpus=0)
+    with pytest.raises(ValueError):
+        RankTopology(n_dpus=4).schedule(10, "sideways")
+
+
+# ---------------------------------------------------------------------------
+# collective data correctness vs numpy oracles
+# ---------------------------------------------------------------------------
+
+def _sys(D=4, **kw):
+    return PIMSystem(DPUConfig(n_dpus=D, **kw))
+
+
+def _img(D=4, words=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 20, (D, words)).astype(np.int32)
+
+
+def test_broadcast_data():
+    s, m = _sys(), _img()
+    want = m[2, 4:12].copy()
+    comm.broadcast(s, m, 4, 8, root=2)
+    assert (m[:, 4:12] == want[None, :]).all()
+    assert s.timeline.inter_dpu > 0
+
+
+def test_scatter_gather_roundtrip():
+    s, m = _sys(), _img()
+    src = m[1, 0:16].copy()          # 4 shards of 4 words on root 1
+    comm.scatter(s, m, 0, 20, 4, root=1)
+    for d in range(4):
+        assert (m[d, 20:24] == src[d * 4:(d + 1) * 4]).all()
+    comm.gather(s, m, 20, 0, 4, root=1)
+    assert (m[1, 0:16] == src).all()
+
+
+@pytest.mark.parametrize("op,ufunc", [("sum", np.add), ("max", np.maximum),
+                                      ("min", np.minimum),
+                                      ("or", np.bitwise_or),
+                                      ("and", np.bitwise_and)])
+def test_reduce_ops(op, ufunc):
+    s, m = _sys(), _img()
+    want = ufunc.reduce(m[:, 0:8], axis=0)
+    comm.reduce(s, m, 0, 8, op=op, root=3)
+    assert (m[3, 0:8] == want).all()
+
+
+def test_allreduce_all_rows():
+    s, m = _sys(), _img()
+    want = m[:, 0:8].sum(0, dtype=np.int32)
+    comm.allreduce(s, m, 0, 8, op="sum")
+    assert (m[:, 0:8] == want[None, :]).all()
+
+
+def test_allgather_data():
+    s, m = _sys(), _img()
+    want = m[:, 0:4].copy().reshape(-1)
+    comm.allgather(s, m, 0, 8, 4)
+    assert (m[:, 8:24] == want[None, :]).all()
+
+
+def test_alltoall_is_block_transpose():
+    s, m = _sys(), _img()
+    blocks = m[:, 0:8].copy().reshape(4, 4, 2)
+    comm.alltoall(s, m, 0, 16, 2)
+    got = m[:, 16:24].reshape(4, 4, 2)
+    assert (got == blocks.transpose(1, 0, 2)).all()
+
+
+def test_unknown_reduce_op():
+    s, m = _sys(), _img()
+    with pytest.raises(ValueError):
+        comm.reduce(s, m, 0, 4, op="xor")
+
+
+def test_out_of_range_region_fails_loudly():
+    # numpy slicing would silently truncate; the primitives must refuse
+    s, m = _sys(), _img(words=8)
+    for call in (lambda: comm.broadcast(s, m, 4, 16),
+                 lambda: comm.allreduce(s, m, 0, 9),
+                 lambda: comm.reduce(s, m, -1, 4),
+                 lambda: comm.gather(s, m, 0, 0, 4),      # dst needs 16
+                 lambda: comm.scatter(s, m, 0, 0, 4),     # src needs 16
+                 lambda: comm.allgather(s, m, 0, 4, 2),   # dst needs 8@4
+                 lambda: comm.alltoall(s, m, 0, 4, 2)):   # regions need 8
+        with pytest.raises(ValueError):
+            call()
+    assert s.timeline.events == []  # nothing charged on failure
+
+
+def test_single_dpu_collectives_free():
+    s, m = _sys(D=1), _img(D=1)
+    comm.allreduce(s, m, 0, 8)
+    comm.broadcast(s, m, 0, 8)
+    assert s.timeline.inter_dpu == 0.0
+
+
+# ---------------------------------------------------------------------------
+# modeled time vs closed forms, both backends
+# ---------------------------------------------------------------------------
+
+def test_host_bounce_allreduce_closed_form():
+    s, m = _sys(D=4), _img(D=4, words=256)
+    comm.allreduce(s, m, 0, 256)
+    w = 4 * 256
+    assert s.timeline.inter_dpu == pytest.approx(w / D2H_BW + w / H2D_BW)
+
+
+def test_host_bounce_gather_serializes_on_root():
+    s, m = _sys(D=4), _img(D=4)
+    comm.gather(s, m, 0, 8, 2, root=0)
+    w = 4 * 2
+    # up: every non-root DPU sends w in parallel; down: root absorbs 3w
+    assert s.timeline.inter_dpu == pytest.approx(w / D2H_BW
+                                                 + 3 * w / H2D_BW)
+
+
+def test_host_bounce_scales_with_ranks_per_channel():
+    # same collective, 2 ranks sharing a channel -> 2x the exchange time
+    s1, m1 = _sys(D=8), _img(D=8, words=64)
+    s2 = PIMSystem(DPUConfig(n_dpus=8, n_ranks=2, n_channels=1))
+    m2 = _img(D=8, words=64)
+    comm.allreduce(s1, m1, 0, 64)
+    comm.allreduce(s2, m2, 0, 64)
+    assert s2.timeline.inter_dpu == pytest.approx(2 * s1.timeline.inter_dpu)
+
+
+def test_direct_fabric_closed_forms():
+    f = DirectFabric(n_dpus=8, link_gbps=1.0, latency_s=1e-7)
+    w = 4096.0
+    assert f.allreduce(w) == pytest.approx(2 * 7 / 8 * w / 1e9 + 14 * 1e-7)
+    assert f.broadcast(w) == pytest.approx(w / 1e9 + 3 * 1e-7)
+    assert f.gather(w) == pytest.approx(7 * w / 1e9 + 1e-7)
+    assert f.alltoall(w) == pytest.approx(7 * w / 1e9 + 7 * 1e-7)
+
+
+def test_direct_beats_host_bounce_at_realistic_volume():
+    w_words = 1024
+    sh = _sys(D=8)
+    sd = _sys(D=8, fabric="direct")
+    mh, md = _img(D=8, words=2048), _img(D=8, words=2048)
+    comm.allreduce(sh, mh, 0, w_words)
+    comm.allreduce(sd, md, 0, w_words)
+    assert (md[:, :w_words] == mh[:, :w_words]).all()  # same data movement
+    assert sd.timeline.inter_dpu < sh.timeline.inter_dpu
+
+
+def test_timeline_attribution():
+    s, m = _sys(D=4), _img(D=4)
+    s.h2d(1000)
+    comm.allreduce(s, m, 0, 8)
+    comm.gather(s, m, 0, 16, 2)
+    by = s.timeline.by_label("inter_dpu")
+    assert set(by) == {"allreduce", "gather"}
+    assert s.timeline.total == pytest.approx(
+        s.timeline.h2d + sum(by.values()))
+
+
+# ---------------------------------------------------------------------------
+# integration: a workload exchanging through the fabric end-to-end
+# ---------------------------------------------------------------------------
+
+def test_hst_merge_through_fabric():
+    import repro.workloads as wl
+    cfg = DPUConfig(n_dpus=2, n_tasklets=8, mram_bytes=1 << 21)
+    sys_ = PIMSystem(cfg)
+    wl.get("HST-S").run(sys_, n_threads=8, scale=0.03)
+    assert sys_.timeline.by_label("inter_dpu").get("reduce", 0) > 0

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; skipping kernel "
+    "property tests (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.alu_exec.ops import alu_exec
 from repro.kernels.alu_exec.ref import alu_exec_ref
