@@ -2,15 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (one per figure/design point).
 ``--scale`` grows datasets toward the paper's Table II sizes; default runs
-the suite at CI scale in a few minutes.
+the suite at CI scale in a few minutes.  ``--suite`` selects a family
+(``figs`` paper figures, ``comm`` interconnect/collectives, ``overlap``
+async-pipeline, ``lm`` serving roofline, ``all``); ``--only`` further
+filters by substring.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--only fig11]
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] \\
+        [--suite comm] [--only fig11]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+
+#: suite families selectable via --suite (benches declare theirs inline)
+SUITE_NAMES = ("figs", "comm", "overlap", "lm")
 
 
 def _emit(name: str, wall_s: float, rows):
@@ -21,11 +28,14 @@ def _emit(name: str, wall_s: float, rows):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--suite", default="all",
+                    choices=("all",) + SUITE_NAMES)
     ap.add_argument("--only", default=None)
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
     args = ap.parse_args()
 
-    from benchmarks import comm_scaling, lm_roofline, pim_figs
+    from benchmarks import comm_scaling, lm_roofline, overlap_scaling, \
+        pim_figs
 
     char = None
 
@@ -35,27 +45,34 @@ def main() -> None:
             char = pim_figs.characterize(args.scale)
         return char
 
+    # single registry: bench name -> (suite, thunk)
     benches = {
-        "fig5_util": lambda: pim_figs.fig5_utilization(need_char(), args.scale),
-        "fig6_breakdown": lambda: pim_figs.fig6_breakdown(need_char(), args.scale),
-        "fig7_tlp_hist": lambda: pim_figs.fig7_tlp_hist(need_char(), args.scale),
-        "fig8_tlp_ts": lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale),
-        "fig9_instr_mix": lambda: pim_figs.fig9_instr_mix(need_char(), args.scale),
-        "fig10_scaling": lambda: pim_figs.fig10_strong_scaling(args.scale),
-        "comm_scaling": lambda: comm_scaling.comm_strong_scaling(args.scale),
-        "comm_micro": lambda: comm_scaling.collective_microbench(args.scale),
-        "fig11_simt": lambda: pim_figs.fig11_simt(args.scale),
-        "fig12_ilp": lambda: pim_figs.fig12_ilp(args.scale),
-        "fig13_mram_bw": lambda: pim_figs.fig13_mram_bw(args.scale),
-        "fig15_cache": lambda: pim_figs.fig15_cache_vs_scratchpad(args.scale),
-        "mmu_overhead": lambda: pim_figs.mmu_overhead(args.scale),
-        "simulation_rate": lambda: pim_figs.simulation_rate(args.scale),
-        "lm_roofline": lambda: lm_roofline.table(args.dryrun_dir),
+        "fig5_util": ("figs", lambda: pim_figs.fig5_utilization(need_char(), args.scale)),
+        "fig6_breakdown": ("figs", lambda: pim_figs.fig6_breakdown(need_char(), args.scale)),
+        "fig7_tlp_hist": ("figs", lambda: pim_figs.fig7_tlp_hist(need_char(), args.scale)),
+        "fig8_tlp_ts": ("figs", lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale)),
+        "fig9_instr_mix": ("figs", lambda: pim_figs.fig9_instr_mix(need_char(), args.scale)),
+        "fig10_scaling": ("figs", lambda: pim_figs.fig10_strong_scaling(args.scale)),
+        "comm_scaling": ("comm", lambda: comm_scaling.comm_strong_scaling(args.scale)),
+        "comm_micro": ("comm", lambda: comm_scaling.collective_microbench(args.scale)),
+        "overlap_scaling": ("overlap", lambda: overlap_scaling.overlap_strong_scaling(args.scale)),
+        "overlap_depth": ("overlap", lambda: overlap_scaling.overlap_depth_sweep(args.scale)),
+        "fig11_simt": ("figs", lambda: pim_figs.fig11_simt(args.scale)),
+        "fig12_ilp": ("figs", lambda: pim_figs.fig12_ilp(args.scale)),
+        "fig13_mram_bw": ("figs", lambda: pim_figs.fig13_mram_bw(args.scale)),
+        "fig15_cache": ("figs", lambda: pim_figs.fig15_cache_vs_scratchpad(args.scale)),
+        "mmu_overhead": ("figs", lambda: pim_figs.mmu_overhead(args.scale)),
+        "simulation_rate": ("figs", lambda: pim_figs.simulation_rate(args.scale)),
+        "lm_roofline": ("lm", lambda: lm_roofline.table(args.dryrun_dir)),
     }
+    bad = {k for k, (s, _) in benches.items() if s not in SUITE_NAMES}
+    assert not bad, f"benches with unknown suite: {bad}"
+    selected = {k: fn for k, (suite, fn) in benches.items()
+                if args.suite in ("all", suite)}
     if args.only:
-        benches = {k: v for k, v in benches.items() if args.only in k}
+        selected = {k: v for k, v in selected.items() if args.only in k}
 
-    for name, fn in benches.items():
+    for name, fn in selected.items():
         t0 = time.time()
         try:
             rows = fn()

@@ -25,7 +25,9 @@ OPS: Dict[str, Callable] = {
 
 
 def _charge(system, kind: str, seconds: float, nbytes: float):
-    system.timeline.add("inter_dpu", seconds, label=kind, nbytes=nbytes)
+    # routes through the repro.sched command queue (COLLECTIVE command on
+    # the current stream) and the timeline's inter_dpu phase
+    system.collective(kind, seconds, nbytes)
 
 
 def _check_region(mram, off: int, n: int):

@@ -9,6 +9,15 @@ behaviour behind Fig. 10's strong-scaling communication bars.
 Inter-DPU communication goes through the system's fabric backend:
 host-bounce (paper §II-B) or a hypothetical direct PIM-PIM fabric
 (pathfinding case study).
+
+Every phase is routed through the ``repro.sched`` command-queue runtime:
+data moves eagerly (payloads and kernels execute at submit time, in
+program order), while the modeled seconds are recorded as typed commands
+on the current stream.  ``mode="inorder"`` (default) chains everything
+on one queue — the fully synchronous PR 2 behaviour, bit-exact.
+``mode="async"`` honors :meth:`PIMSystem.stream` contexts so the list
+scheduler can overlap transfers with kernels; resolve with
+:meth:`PIMSystem.sync`, which stamps ``timeline.elapsed``.
 """
 from __future__ import annotations
 
@@ -18,18 +27,25 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.comm.fabric import Fabric, make_fabric
-from repro.comm.topology import RankTopology
+from repro.comm.topology import RankTopology, TransferEvent
 from repro.core import engine, simt, stats
 from repro.core.asm import ARG_BYTES, CACHE_DATA_BASE, Program
 from repro.core.config import DPUConfig
 from repro.core.isa import Binary
+from repro.sched import queue as sq
+from repro.sched import scheduler as ssched
 
 PHASES = ("h2d", "kernel", "d2h", "inter_dpu")
 
 
 @dataclass
 class Timeline:
-    """Accumulated end-to-end execution phases (seconds)."""
+    """Accumulated end-to-end execution phases (seconds).
+
+    The per-phase fields and ``total`` are *busy* sums — the serialized
+    reference, independent of any overlap.  ``elapsed`` is the overlapped
+    makespan stamped by :meth:`PIMSystem.sync` (``None`` until then);
+    ``end_to_end`` is the modeled wall time either way."""
 
     h2d: float = 0.0
     kernel: float = 0.0
@@ -37,6 +53,8 @@ class Timeline:
     inter_dpu: float = 0.0  # inter-DPU exchanges between kernels
     #: per-event attribution: (phase, label, seconds, bytes)
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
+    #: overlapped makespan from the repro.sched scheduler (None = not synced)
+    elapsed: Optional[float] = None
 
     def add(self, phase: str, seconds: float, label: str = "",
             nbytes: float = 0.0):
@@ -48,6 +66,17 @@ class Timeline:
     @property
     def total(self) -> float:
         return self.h2d + self.kernel + self.d2h + self.inter_dpu
+
+    @property
+    def end_to_end(self) -> float:
+        """Overlapped makespan when scheduled, serialized sum otherwise."""
+        return self.total if self.elapsed is None else self.elapsed
+
+    @property
+    def overlap_saved(self) -> float:
+        """Seconds the async schedule hid under other phases."""
+        return 0.0 if self.elapsed is None else max(
+            0.0, self.total - self.elapsed)
 
     def breakdown(self) -> Dict[str, float]:
         t = max(self.total, 1e-30)
@@ -66,31 +95,104 @@ class Timeline:
 class PIMSystem:
     """Channels x ranks x DPUs + the host runtime."""
 
-    def __init__(self, cfg: DPUConfig, fabric: Optional[Fabric] = None):
+    def __init__(self, cfg: DPUConfig, fabric: Optional[Fabric] = None,
+                 mode: str = "inorder"):
         self.cfg = cfg
         self.topology = RankTopology.from_config(cfg)
         self.fabric = fabric or make_fabric(cfg, self.topology)
         self.timeline = Timeline()
         self.reports = []
+        self.runtime = sq.QueueRuntime(mode)
+        self.last_schedule: Optional[ssched.Schedule] = None
+
+    # ---- command-queue plumbing ---------------------------------------------
+    def _submit(self, kind: str, phase: str, label: str, seconds: float,
+                nbytes: float, resources: Dict[str, float]) -> "sq.Command":
+        """Charge the timeline (eager, serialized-order sums) and queue the
+        command for the overlapped schedule."""
+        self._invalidate_schedule()
+        self.timeline.add(phase, seconds, label, nbytes)
+        return self.runtime.submit(kind, label or phase, seconds,
+                                   phase=phase, nbytes=nbytes,
+                                   resources=resources)
+
+    def _invalidate_schedule(self):
+        # a schedule resolved by sync() no longer covers newly submitted
+        # work; drop it so end_to_end falls back to the serialized sum
+        # until the next sync() instead of silently under-reporting
+        self.timeline.elapsed = None
+        self.last_schedule = None
+
+    def _chan_resources(self, ev: TransferEvent) -> Dict[str, float]:
+        return {f"chan{c}": busy
+                for c, busy in enumerate(ev.channel_busy) if busy > 0.0}
+
+    def _fabric_resources(self, seconds: float) -> Dict[str, float]:
+        if self.fabric.name == "direct":
+            return {"fabric": seconds}
+        # host bounce drives the AVX copy loops over every memory channel
+        return {f"chan{c}": seconds
+                for c in range(self.topology.n_channels)}
+
+    def stream(self, name: str):
+        """Submission context: with ``mode="async"`` commands issued inside
+        land on queue ``name`` (in-order mode keeps the single chain)."""
+        return self.runtime.stream(name)
+
+    def record_event(self, label: str = "") -> "sq.Event":
+        """Completion marker for everything submitted so far on the
+        current stream."""
+        self._invalidate_schedule()
+        return self.runtime.record_event(label)
+
+    def wait_event(self, ev: "sq.Event") -> "sq.Command":
+        """Block the current stream until ``ev``'s recorder finishes."""
+        self._invalidate_schedule()
+        return self.runtime.wait_event(ev)
+
+    def sync(self) -> "ssched.Schedule":
+        """Resolve all queued commands into the overlapped schedule and
+        stamp ``timeline.elapsed`` with its makespan."""
+        sched = ssched.schedule(self.runtime.queues)
+        self.timeline.elapsed = sched.makespan
+        self.last_schedule = sched
+        return sched
 
     # ---- transfer accounting -------------------------------------------------
-    def h2d(self, bytes_per_dpu, label: str = "h2d"):
+    def h2d(self, bytes_per_dpu, label: str = "h2d") -> "sq.Command":
         """Host write; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "h2d")
-        self.timeline.add("h2d", ev.seconds, label, ev.total_bytes)
+        return self._submit(sq.H2D, "h2d", label, ev.seconds, ev.total_bytes,
+                            self._chan_resources(ev))
 
-    def d2h(self, bytes_per_dpu, label: str = "d2h"):
+    def d2h(self, bytes_per_dpu, label: str = "d2h") -> "sq.Command":
         """Host read; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "d2h")
-        self.timeline.add("d2h", ev.seconds, label, ev.total_bytes)
+        return self._submit(sq.D2H, "d2h", label, ev.seconds, ev.total_bytes,
+                            self._chan_resources(ev))
+
+    def collective(self, kind: str, seconds: float,
+                   nbytes: float) -> "sq.Command":
+        """Charge one inter-DPU collective exchange (called by
+        ``repro.comm.collectives`` after it moved the payload)."""
+        return self._submit(sq.COLLECTIVE, "inter_dpu", kind, seconds, nbytes,
+                            self._fabric_resources(seconds))
 
     def inter_dpu(self, bytes_per_dpu: float):
         """Legacy host bounce: ``bytes_per_dpu`` is the worst-case per-DPU
         payload, scheduled on every DPU (so time scales with ranks per
         channel). Prefer the ``repro.comm`` collectives, which account
         exact per-DPU vectors."""
-        self.timeline.add("inter_dpu", self.fabric.bounce(bytes_per_dpu),
-                          "bounce", bytes_per_dpu)
+        self.collective("bounce", self.fabric.bounce(bytes_per_dpu),
+                        bytes_per_dpu)
+
+    def modeled_launch(self, name: str, seconds: float) -> "sq.Command":
+        """Charge a kernel of known duration without running the engine —
+        for what-if schedule studies and tests.  Holds every rank's
+        compute slots, exactly like a real :meth:`launch`."""
+        return self._submit(
+            sq.LAUNCH, "kernel", name, seconds, 0.0,
+            {f"rank{r}": seconds for r in range(self.topology.n_ranks)})
 
     # ---- kernel launch ---------------------------------------------------------
     def launch(self, name: str, binary: Binary, args: np.ndarray,
@@ -123,7 +225,9 @@ class PIMSystem:
                 f"{name}: kernel hit max_cycles={cfg.max_cycles} "
                 f"(status={np.unique(st['status'])})")
         rep = stats.report_from_state(name, cfg, st, T)
-        self.timeline.add("kernel", rep.kernel_seconds, name)
+        # the kernel holds every rank's compute slots; transfers on the
+        # channel links are free to overlap it
+        self.modeled_launch(name, rep.kernel_seconds)
         self.reports.append(rep)
         return st, rep
 

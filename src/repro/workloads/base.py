@@ -56,7 +56,20 @@ class Workload:
         return max(n // 48, 2) * 48
 
     def run(self, system: PIMSystem, n_threads: int, scale: float = 1.0,
-            seed: int = 0, cache_mode: bool = False):
+            seed: int = 0, cache_mode: bool = False, pipeline: int = 0):
+        """Public entry point for every workload.  ``pipeline=N`` (N > 1)
+        switches to the double-buffered batch mode for any workload;
+        subclasses customize execution by overriding :meth:`_run`, never
+        this dispatcher."""
+        if pipeline > 1:
+            st, rep, _ = self.run_pipelined(system, n_threads,
+                                            n_batches=pipeline, scale=scale,
+                                            seed=seed, cache_mode=cache_mode)
+            return st, rep
+        return self._run(system, n_threads, scale, seed, cache_mode)
+
+    def _run(self, system: PIMSystem, n_threads: int, scale: float = 1.0,
+             seed: int = 0, cache_mode: bool = False):
         hd = self.host_data(system.cfg, scale, seed, cache_mode=cache_mode)
         prog = self.build(n_threads, cache_mode=cache_mode)
         binary = prog.binary(system.cfg.iram_instrs)
@@ -82,6 +95,18 @@ class Workload:
         """Post-kernel epilogue: charge the host readback. Subclasses may
         first merge inter-DPU state through ``repro.comm`` collectives."""
         system.d2h(hd.d2h_bytes)
+
+    def run_pipelined(self, system: PIMSystem, n_threads: int,
+                      n_batches: int = 4, scale: float = 1.0, seed: int = 0,
+                      cache_mode: bool = False, buffers: int = 2):
+        """Double-buffered batch mode: ``n_batches`` independent instances
+        (seeds ``seed..seed+n_batches-1``), each on its own stream, so an
+        async system overlaps staging/readback with other batches'
+        kernels.  Returns ``(last_state, merged_report, schedule)``."""
+        from repro.sched.pipeline import run_pipelined
+        return run_pipelined(self, system, n_threads, n_batches=n_batches,
+                             scale=scale, seed=seed, buffers=buffers,
+                             cache_mode=cache_mode)
 
 
 # ---------------------------------------------------------------------------

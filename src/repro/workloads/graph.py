@@ -4,9 +4,10 @@ NW (Needleman-Wunsch wavefront DP).
 Both exercise the paper's inter-DPU communication path: per-iteration
 shared state (BFS frontiers / NW block boundaries) crosses DPUs between
 kernel launches (§II-B, Fig. 10's sub-linear scalers). BFS routes its
-frontier/dist merge through ``repro.comm`` allreduce collectives, so the
-exchange is host-bounced or direct-fabric depending on the system's
-configured backend."""
+frontier/dist merge through ``repro.comm`` allreduce collectives, and NW
+exchanges its tile boundaries through gather/scatter collectives, so both
+are host-bounced or direct-fabric depending on the system's configured
+backend and get per-event phase attribution."""
 from __future__ import annotations
 
 import numpy as np
@@ -186,8 +187,8 @@ class BFS(Workload):
     def host_data(self, cfg, scale=1.0, seed=0, cache_mode=False):
         raise NotImplementedError("BFS is multi-kernel; use run()")
 
-    def run(self, system: PIMSystem, n_threads: int, scale=1.0, seed=0,
-            cache_mode=False):
+    def _run(self, system: PIMSystem, n_threads: int, scale=1.0, seed=0,
+             cache_mode=False):
         cfg = system.cfg
         D = cfg.n_dpus
         V, rowptr, adj = self.make_graph(scale, seed)
@@ -395,8 +396,8 @@ class NW(Workload):
     def host_data(self, cfg, scale=1.0, seed=0, cache_mode=False):
         raise NotImplementedError("NW is multi-kernel; use run()")
 
-    def run(self, system: PIMSystem, n_threads: int, scale=1.0, seed=0,
-            cache_mode=False):
+    def _run(self, system: PIMSystem, n_threads: int, scale=1.0, seed=0,
+             cache_mode=False):
         cfg = system.cfg
         D = cfg.n_dpus
         n = max(int(self.default_n * scale) // NW_T, 2) * NW_T
@@ -416,6 +417,7 @@ class NW(Workload):
         nb_tiles = n // NW_T
         system.h2d(4 * (2 * n + row1 * row1))
         reps = []
+        prev_tiles, prev_per = [], 0  # producers of the last diagonal
         for diag in range(2 * nb_tiles - 1):
             tiles = [(bi, diag - bi) for bi in range(nb_tiles)
                      if 0 <= diag - bi < nb_tiles]
@@ -430,8 +432,46 @@ class NW(Workload):
                 mine = tiles[d * per:(d + 1) * per]
                 args[d] = [n, diag, oh, oa_, ob,
                            mine[0][0] if mine else 0, len(mine)]
-            if D > 1:
-                system.inter_dpu(4 * (len(tiles) * NW_T * 2))  # boundaries
+            if D > 1 and prev_tiles:
+                # Boundary exchange through repro.comm instead of the old
+                # flat worst-case bounce, so the bytes get per-event
+                # gather/scatter attribution and ride the configured
+                # fabric.  Up leg: every DPU uploads the tile edges it
+                # PRODUCED on the previous diagonal (bottom row + right
+                # column per tile).  Down leg: the host scatters each
+                # consumer the halo its current tiles NEED (top row +
+                # left column), in consumer order — DPU d receives its
+                # neighbours' edges, not its own shard back.
+                pwords = prev_per * 2 * NW_T
+                up = np.zeros((D, (D + 1) * pwords), np.int32)
+                for d in range(D):
+                    for idx, (bi, bj) in \
+                            enumerate(prev_tiles[d * prev_per:
+                                                 (d + 1) * prev_per]):
+                        o = idx * 2 * NW_T
+                        up[d, o:o + NW_T] = \
+                            H[(bi + 1) * NW_T,
+                              bj * NW_T + 1:bj * NW_T + 1 + NW_T]
+                        up[d, o + NW_T:o + 2 * NW_T] = \
+                            H[bi * NW_T + 1:(bi + 1) * NW_T + 1,
+                              (bj + 1) * NW_T]
+                collectives.gather(system, up, 0, pwords, pwords, root=0)
+                bwords = per * 2 * NW_T
+                down = np.zeros((D, (D + 1) * bwords), np.int32)
+                halo = np.zeros((D, bwords), np.int32)
+                for d in range(D):
+                    for idx, (bi, bj) in \
+                            enumerate(tiles[d * per:(d + 1) * per]):
+                        o = idx * 2 * NW_T
+                        halo[d, o:o + NW_T] = \
+                            H[bi * NW_T, bj * NW_T + 1:bj * NW_T + 1 + NW_T]
+                        halo[d, o + NW_T:o + 2 * NW_T] = \
+                            H[bi * NW_T + 1:(bi + 1) * NW_T + 1, bj * NW_T]
+                down[0, bwords:] = halo.reshape(-1)  # consumer-ordered
+                collectives.scatter(system, down, bwords, 0, bwords, root=0)
+                assert np.array_equal(down[:, :bwords], halo), \
+                    "NW halo scatter delivered the wrong boundary words"
+            prev_tiles, prev_per = tiles, per
             st, rep = system.launch("NW", binary, args, mram,
                                     n_threads=n_threads)
             reps.append(rep)

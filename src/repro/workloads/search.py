@@ -236,7 +236,7 @@ class TS(Workload):
         hd.extra = holder
         return hd
 
-    def run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
+    def _run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
         hd = self.host_data(system.cfg, scale, seed)
         hd.extra["nt"] = n_threads
         prog = self.build(n_threads, cache_mode=cache_mode)

@@ -395,11 +395,11 @@ class _ScanBase(Workload):
         return HostData(args, img, h2d_bytes=4 * n, d2h_bytes=4 * n,
                         check=check)
 
-    def run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
+    def _run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
         # inter-DPU bases bounce through the host (counted as inter-DPU traffic)
         if system.cfg.n_dpus > 1:
             system.inter_dpu(8.0)
-        return super().run(system, n_threads, scale, seed, cache_mode)
+        return super()._run(system, n_threads, scale, seed, cache_mode)
 
 
 class SCAN_SSA(_ScanBase):
@@ -734,7 +734,7 @@ class _CompactBase(Workload):
         hd.extra = nt_holder
         return hd
 
-    def run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
+    def _run(self, system, n_threads, scale=1.0, seed=0, cache_mode=False):
         hd = self.host_data(system.cfg, scale, seed, cache_mode=cache_mode)
         hd.extra["nt"] = n_threads
         prog = self.build(n_threads, cache_mode=cache_mode)

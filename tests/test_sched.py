@@ -1,0 +1,274 @@
+"""repro.sched: queue/event/scheduler invariants, in-order equivalence
+with the serialized (PR 2) timeline, and pipelined workload oracles."""
+import numpy as np
+import pytest
+
+import repro.workloads as wl
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.sched import queue as sq
+from repro.sched import scheduler as ssched
+
+H2D_BW = DPUConfig().h2d_gbps_per_dpu * 1e9
+D2H_BW = DPUConfig().d2h_gbps_per_dpu * 1e9
+
+
+def _sys(D=8, ranks=2, chans=2, mode="async", **kw):
+    return PIMSystem(DPUConfig(n_dpus=D, n_ranks=ranks, n_channels=chans,
+                               **kw), mode=mode)
+
+
+def _launch(sys_, secs, label="k"):
+    return sys_.modeled_launch(label, secs)
+
+
+# ---------------------------------------------------------------------------
+# queue / command construction
+# ---------------------------------------------------------------------------
+
+def test_command_validation():
+    with pytest.raises(ValueError):
+        sq.Command(kind="NOPE", label="", seconds=0.0, seq=0, queue="q")
+    with pytest.raises(ValueError):
+        sq.Command(kind=sq.H2D, label="", seconds=-1.0, seq=0, queue="q")
+    with pytest.raises(ValueError):  # resource held past the command's end
+        sq.Command(kind=sq.H2D, label="", seconds=1.0, seq=0, queue="q",
+                   resources={"chan0": 2.0})
+    with pytest.raises(ValueError):
+        sq.QueueRuntime("sideways")
+
+
+def test_inorder_mode_ignores_streams():
+    s = _sys(mode="inorder")
+    s.h2d(1000)
+    with s.stream("other"):
+        s.h2d(1000)
+    assert [q.name for q in s.runtime.queues] == ["main"]
+    assert len(s.runtime.queue("main")) == 2
+
+
+def test_async_mode_routes_streams():
+    s = _sys(mode="async")
+    s.h2d(1000)
+    with s.stream("other"):
+        s.h2d(1000)
+    assert {q.name: len(q) for q in s.runtime.queues} == \
+        {"main": 1, "other": 1}
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_events_never_reorder_commands_within_a_queue():
+    # a late event wait must delay, not reorder, the rest of its queue
+    s = _sys()
+    with s.stream("a"):
+        k = _launch(s, 1.0, "slow")
+        done = s.record_event()
+    with s.stream("b"):
+        c1 = s.runtime.submit(sq.D2H, "pre", 0.25, phase="d2h")
+        s.wait_event(done)
+        c2 = s.runtime.submit(sq.D2H, "post", 0.25, phase="d2h")
+        c3 = s.runtime.submit(sq.D2H, "post2", 0.25, phase="d2h")
+    sched = s.sync()
+    spans = [sched.span(c) for c in (c1, c2, c3)]
+    # submission order preserved: each starts at/after the previous finish
+    for (s0, f0), (s1, _) in zip(spans, spans[1:]):
+        assert s1 >= f0
+    # and the wait pushed c2 behind the recorded kernel
+    assert spans[1][0] >= sched.span(k)[1]
+
+
+def test_cross_queue_wait_honored():
+    s = _sys()
+    with s.stream("a"):
+        _launch(s, 2.0)
+        ev = s.record_event("a done")
+    with s.stream("b"):
+        s.wait_event(ev)
+        c = s.runtime.submit(sq.LAUNCH, "after", 1.0, phase="kernel")
+    sched = s.sync()
+    assert sched.span(c)[0] >= 2.0
+    assert sched.makespan == pytest.approx(3.0)
+
+
+def test_unrecorded_event_deadlocks():
+    s = _sys()
+    with s.stream("b"):
+        s.runtime.submit(sq.EVENT_WAIT, "w", 0.0, waits=(sq.Event(),))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        s.sync()
+
+
+def test_foreign_event_rejected():
+    # an event recorded on system A must not resolve (by seq collision)
+    # against an unrelated command of system B
+    a, b = _sys(), _sys()
+    with a.stream("x"):
+        a.h2d(1e6)
+        ev = a.record_event()
+    b.h2d(1e6)  # same seq numbering as a's commands
+    with pytest.raises(ValueError, match="different QueueRuntime"):
+        b.wait_event(ev)
+
+
+def test_same_channel_transfers_serialize():
+    s = _sys(D=8, ranks=2, chans=1)
+    with s.stream("a"):
+        a = s.h2d(1e6)
+    with s.stream("b"):
+        b = s.h2d(1e6)
+    sched = s.sync()
+    (sa, fa), (sb, fb) = sched.span(a), sched.span(b)
+    assert sb >= fa or sa >= fb  # no overlap on one shared channel
+    assert sched.makespan == pytest.approx(2 * 2 * 1e6 / H2D_BW)
+
+
+def test_distinct_channel_transfers_overlap():
+    s = _sys(D=8, ranks=2, chans=2)
+    vec0 = np.zeros(8); vec0[:4] = 1e6   # rank 0 -> channel 0
+    vec1 = np.zeros(8); vec1[4:] = 1e6   # rank 1 -> channel 1
+    with s.stream("a"):
+        s.h2d(vec0)
+    with s.stream("b"):
+        s.h2d(vec1)
+    sched = s.sync()
+    one = 1e6 / H2D_BW
+    assert sched.makespan == pytest.approx(one)      # fully overlapped
+    assert s.timeline.total == pytest.approx(2 * one)
+
+
+def test_transfer_overlaps_kernel():
+    s = _sys()
+    with s.stream("compute"):
+        _launch(s, 1.0)
+    with s.stream("xfer"):
+        x = s.runtime.submit(sq.H2D, "stage", 0.4, phase="h2d",
+                             resources={"chan0": 0.4})
+    sched = s.sync()
+    assert sched.span(x)[0] == 0.0                   # starts under the kernel
+    assert sched.makespan == pytest.approx(1.0)
+    assert sched.exposed("kernel") == pytest.approx(0.0)
+
+
+def test_deterministic_tie_break_by_submission_order():
+    s = _sys()
+    with s.stream("b"):
+        cb = s.runtime.submit(sq.H2D, "b", 1.0, phase="h2d",
+                              resources={"chan0": 1.0})
+    with s.stream("a"):
+        ca = s.runtime.submit(sq.H2D, "a", 1.0, phase="h2d",
+                              resources={"chan0": 1.0})
+    sched = s.sync()
+    assert sched.span(cb)[0] == 0.0 and sched.span(ca)[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# in-order mode == the PR 2 serialized timeline
+# ---------------------------------------------------------------------------
+
+def test_inorder_single_queue_is_serialized():
+    s = _sys(mode="inorder")
+    s.h2d(1e6, "in")
+    _launch(s, 0.003)
+    s.d2h(2e5, "out")
+    s.inter_dpu(1e4)
+    sched = s.sync()
+    # back-to-back: each command starts exactly at the previous finish
+    items = sched.items
+    assert [it.cmd.seq for it in items] == sorted(it.cmd.seq for it in items)
+    for prev, cur in zip(items, items[1:]):
+        assert cur.start == prev.finish
+    assert s.timeline.elapsed == pytest.approx(s.timeline.total, rel=1e-12)
+    assert s.timeline.overlap_saved == 0.0
+
+
+def test_inorder_timeline_matches_closed_form():
+    # the queue-routed phases must charge exactly what RankTopology says —
+    # i.e. routing through repro.sched changed nothing vs the PR 2 path
+    s = _sys(D=8, ranks=2, chans=1, mode="inorder")
+    s.h2d(1e6)
+    s.d2h(1e6)
+    assert s.timeline.h2d == pytest.approx(2 * 1e6 / H2D_BW)
+    assert s.timeline.d2h == pytest.approx(2 * 1e6 / D2H_BW)
+    assert [e[0] for e in s.timeline.events] == ["h2d", "d2h"]
+
+
+def test_end_to_end_before_sync_falls_back_to_total():
+    s = _sys(mode="inorder")
+    s.h2d(1e6)
+    assert s.timeline.elapsed is None
+    assert s.timeline.end_to_end == s.timeline.total
+
+
+# ---------------------------------------------------------------------------
+# pipelined workloads: oracles still pass, overlap is real
+# ---------------------------------------------------------------------------
+
+def _wl_cfg(**kw):
+    return dict(D=2, ranks=1, chans=1, n_tasklets=8,
+                mram_bytes=1 << 21, **kw)
+
+
+def test_pipelined_hst_oracle_and_overlap():
+    # Workload.run's pipelined mode; HST's readback collective rides along
+    ser = _sys(mode="inorder", **_wl_cfg())
+    wl.get("HST-S").run(ser, n_threads=8, scale=0.03, pipeline=3)
+    pipe = _sys(mode="async", **_wl_cfg())
+    # oracles run inside (run raises on any mismatch)
+    wl.get("HST-S").run(pipe, n_threads=8, scale=0.03, pipeline=3)
+    assert ser.timeline.elapsed == pytest.approx(ser.timeline.total,
+                                                 rel=1e-12)
+    assert pipe.timeline.elapsed < ser.timeline.elapsed
+    assert pipe.timeline.overlap_saved > 0
+    # same work submitted either way, only the schedule differs
+    assert pipe.timeline.total == pytest.approx(ser.timeline.total)
+
+
+@pytest.mark.slow
+def test_pipelined_bfs_oracle():
+    pipe = _sys(mode="async", **_wl_cfg())
+    st, rep, sched = wl.get("BFS").run_pipelined(pipe, n_threads=8,
+                                                 n_batches=2, scale=0.05)
+    assert rep.cycles > 0
+    assert pipe.timeline.elapsed == pytest.approx(sched.makespan)
+    assert pipe.timeline.elapsed <= pipe.timeline.total
+
+
+def test_pipeline_validation():
+    pipe = _sys(mode="async", **_wl_cfg())
+    with pytest.raises(ValueError):
+        wl.get("VA").run_pipelined(pipe, 8, n_batches=0)
+    with pytest.raises(ValueError):
+        wl.get("VA").run_pipelined(pipe, 8, n_batches=2, buffers=0)
+
+
+def test_submit_after_sync_invalidates_schedule():
+    # a stale makespan must not under-report work queued after sync()
+    s = _sys()
+    _launch(s, 1.0)
+    s.sync()
+    assert s.timeline.elapsed == pytest.approx(1.0)
+    s.h2d(1e6)
+    assert s.timeline.elapsed is None and s.last_schedule is None
+    assert s.timeline.end_to_end == s.timeline.total  # serialized fallback
+    s.sync()
+    assert s.timeline.elapsed == pytest.approx(s.timeline.total, rel=1e-12)
+
+
+@pytest.mark.parametrize("name", ["SEL", "TS", "SCAN-SSA"])
+def test_pipeline_kwarg_works_for_every_run_override(name):
+    # run() dispatches pipeline centrally; overrides customize _run only
+    pipe = _sys(mode="async", **_wl_cfg())
+    wl.get(name).run(pipe, n_threads=8, scale=0.03, pipeline=2)
+    assert pipe.timeline.elapsed is not None
+    assert pipe.timeline.elapsed <= pipe.timeline.total
+
+
+def test_nw_boundary_exchange_uses_collectives():
+    s = _sys(mode="inorder", **_wl_cfg())
+    wl.get("NW").run(s, n_threads=8, scale=0.08)
+    by = s.timeline.by_label("inter_dpu")
+    assert by.get("gather", 0) > 0 and by.get("scatter", 0) > 0
+    assert "bounce" not in by  # legacy flat bounce fully retired
