@@ -35,7 +35,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import comm_scaling, lm_roofline, overlap_scaling, \
-        pim_figs
+        pim_figs, rank_overlap
 
     char = None
 
@@ -57,6 +57,8 @@ def main() -> None:
         "comm_micro": ("comm", lambda: comm_scaling.collective_microbench(args.scale)),
         "overlap_scaling": ("overlap", lambda: overlap_scaling.overlap_strong_scaling(args.scale)),
         "overlap_depth": ("overlap", lambda: overlap_scaling.overlap_depth_sweep(args.scale)),
+        "rank_overlap": ("overlap", lambda: rank_overlap.rank_overlap(args.scale)),
+        "rank_contention": ("overlap", lambda: rank_overlap.contention_sweep(args.scale)),
         "fig11_simt": ("figs", lambda: pim_figs.fig11_simt(args.scale)),
         "fig12_ilp": ("figs", lambda: pim_figs.fig12_ilp(args.scale)),
         "fig13_mram_bw": ("figs", lambda: pim_figs.fig13_mram_bw(args.scale)),

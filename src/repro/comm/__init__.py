@@ -11,8 +11,11 @@ Architecture map (module -> paper section it models):
 * :mod:`repro.comm.fabric` — **§II-B** (``HostBounceFabric``: the only
   inter-DPU path on today's hardware is DPU -> CPU -> DPU) and the
   **pathfinding case study** (``DirectFabric``: a hypothetical PIM-PIM
-  interconnect with configurable per-link bandwidth/latency, which the
-  paper argues future PIM architectures need).
+  interconnect with configurable per-link bandwidth/latency, and
+  ``HierarchicalFabric``: a two-stage intra-rank + cross-rank design
+  that exploits rank locality, both of which the paper argues future
+  PIM architectures need).  All backends support ``subset(dpus)``
+  pricing views for rank-subset collectives.
 * :mod:`repro.comm.collectives` — **Fig. 10's inter-kernel exchanges**
   as first-class primitives: broadcast / scatter / gather / reduce /
   allreduce / allgather / alltoall. They move real numpy payloads
@@ -21,19 +24,21 @@ Architecture map (module -> paper section it models):
   so identical data moves under either backend — only the time differs.
 
 Entry points: build a ``PIMSystem`` with ``DPUConfig(n_ranks=...,
-n_channels=..., fabric="host"|"direct")`` and call the collectives with
-the system plus a ``(D, mram_words)`` image; see
+n_channels=..., fabric="host"|"direct"|"hier")`` and call the
+collectives with the system plus a ``(D, mram_words)`` image (pass
+``dpus=`` for a rank-subset exchange); see
 ``examples/pim_comm_pathfind.py`` for the Fig. 10-style sweep.
 """
 from repro.comm.collectives import (allgather, allreduce, alltoall, broadcast,
                                     gather, reduce, scatter)
-from repro.comm.fabric import (DirectFabric, Fabric, HostBounceFabric,
-                               make_fabric)
+from repro.comm.fabric import (DirectFabric, Fabric, HierarchicalFabric,
+                               HostBounceFabric, make_fabric)
 from repro.comm.topology import RankTopology, TransferEvent
 
 __all__ = [
     "RankTopology", "TransferEvent",
-    "Fabric", "HostBounceFabric", "DirectFabric", "make_fabric",
+    "Fabric", "HostBounceFabric", "DirectFabric", "HierarchicalFabric",
+    "make_fabric",
     "broadcast", "scatter", "gather", "reduce", "allreduce", "allgather",
     "alltoall",
 ]

@@ -3,15 +3,22 @@
 Every primitive physically moves numpy payloads between the rows of a
 ``(D, mram_words)`` int32 image (row d = DPU d's bank) *and* charges the
 modeled transfer time of the system's fabric backend to the timeline's
-``inter_dpu`` phase. Host-bounce and direct-fabric backends move the
-same bytes — only the charged seconds differ — so workload outputs are
-backend-independent by construction.
+``inter_dpu`` phase. Host-bounce, direct-fabric and hierarchical
+backends move the same bytes — only the charged seconds differ — so
+workload outputs are backend-independent by construction.
 
 Offsets and counts are in 32-bit words, matching the engine's MRAM view.
+
+Every primitive accepts ``dpus=``: an explicit DPU subset.  Only those
+rows participate (``root`` must be one of them and still names an
+absolute DPU id), the time is priced on the fabric's subset view, and
+the queued COLLECTIVE command holds only the participating ranks' link
+shares — so two collectives on disjoint rank sets overlap in an async
+schedule instead of serializing on whole-channel resources.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,10 +31,10 @@ OPS: Dict[str, Callable] = {
 }
 
 
-def _charge(system, kind: str, seconds: float, nbytes: float):
+def _charge(system, kind: str, seconds: float, nbytes: float, ranks=None):
     # routes through the repro.sched command queue (COLLECTIVE command on
     # the current stream) and the timeline's inter_dpu phase
-    system.collective(kind, seconds, nbytes)
+    system.collective(kind, seconds, nbytes, ranks=ranks)
 
 
 def _check_region(mram, off: int, n: int):
@@ -46,95 +53,171 @@ def _reduce_rows(mram, off: int, n: int, op: str) -> np.ndarray:
     return ufunc.reduce(mram[:, off:off + n], axis=0)
 
 
-def broadcast(system, mram: np.ndarray, off: int, n: int, root: int = 0):
+def _normalize(mram, dpus: Optional[Sequence[int]]):
+    """Sorted, deduplicated, bounds-checked subset index (None = all)."""
+    if dpus is None:
+        return None
+    idx = np.asarray(sorted({int(d) for d in dpus}), int)
+    if len(idx) == 0:
+        raise ValueError("dpus subset must not be empty")
+    if idx[0] < 0 or idx[-1] >= mram.shape[0]:
+        raise ValueError(f"dpus {idx.tolist()} outside image of "
+                         f"{mram.shape[0]} rows")
+    return idx
+
+
+def _view(system, mram, idx, words: int, *roots: int):
+    """Working view for an optional subset ``idx``.
+
+    Returns ``(view, fabric, ranks, mapped_roots)``: the first ``words``
+    columns of the participating rows (the image itself when ``idx`` is
+    None — a copy otherwise, sized to the touched region, committed back
+    by :func:`_commit`), the fabric pricing view, the participating
+    ranks (None = all), and each ``root`` mapped to its position within
+    the subset."""
+    if idx is None:
+        return mram, system.fabric, None, roots
+    if words > mram.shape[1]:
+        raise ValueError(f"region [0, {words}) outside image of "
+                         f"{mram.shape[1]} words")
+    mapped = []
+    for r in roots:
+        pos = int(np.searchsorted(idx, r))
+        if pos >= len(idx) or idx[pos] != r:
+            raise ValueError(f"root {r} is not in dpus {idx.tolist()}")
+        mapped.append(pos)
+    return (mram[idx][:, :max(words, 0)], system.fabric.subset(idx),
+            system.topology.ranks_of(idx), tuple(mapped))
+
+
+def _commit(mram, idx, view):
+    if idx is not None:
+        for i, d in enumerate(idx):
+            mram[d, :view.shape[1]] = view[i]
+
+
+def broadcast(system, mram: np.ndarray, off: int, n: int, root: int = 0,
+              dpus: Optional[Sequence[int]] = None):
     """Replicate ``n`` words at ``off`` from DPU ``root`` to all DPUs."""
-    _check_region(mram, off, n)
-    D = mram.shape[0]
-    mram[:, off:off + n] = mram[root, off:off + n]
+    idx = _normalize(mram, dpus)
+    view, fab, ranks, (r,) = _view(system, mram, idx, off + n, root)
+    _check_region(view, off, n)
+    D = view.shape[0]
+    view[:, off:off + n] = view[r, off:off + n]
     if D > 1:
         _charge(system, "broadcast",
-                system.fabric.broadcast(4.0 * n, root), 4.0 * n * (D - 1))
+                fab.broadcast(4.0 * n, r), 4.0 * n * (D - 1), ranks)
+    _commit(mram, idx, view)
 
 
 def scatter(system, mram: np.ndarray, src_off: int, dst_off: int,
-            n_per_dpu: int, root: int = 0):
+            n_per_dpu: int, root: int = 0,
+            dpus: Optional[Sequence[int]] = None):
     """Split ``D * n_per_dpu`` words at ``src_off`` on ``root`` into
     per-DPU shards of ``n_per_dpu`` words at ``dst_off``."""
-    D = mram.shape[0]
-    _check_region(mram, src_off, D * n_per_dpu)
-    _check_region(mram, dst_off, n_per_dpu)
-    src = mram[root, src_off:src_off + D * n_per_dpu].copy()
+    idx = _normalize(mram, dpus)
+    D = mram.shape[0] if idx is None else len(idx)
+    view, fab, ranks, (r,) = _view(
+        system, mram, idx,
+        max(src_off + D * n_per_dpu, dst_off + n_per_dpu), root)
+    _check_region(view, src_off, D * n_per_dpu)
+    _check_region(view, dst_off, n_per_dpu)
+    src = view[r, src_off:src_off + D * n_per_dpu].copy()
     for d in range(D):
-        mram[d, dst_off:dst_off + n_per_dpu] = \
+        view[d, dst_off:dst_off + n_per_dpu] = \
             src[d * n_per_dpu:(d + 1) * n_per_dpu]
     if D > 1:
         _charge(system, "scatter",
-                system.fabric.scatter(4.0 * n_per_dpu, root),
-                4.0 * n_per_dpu * (D - 1))
+                fab.scatter(4.0 * n_per_dpu, r),
+                4.0 * n_per_dpu * (D - 1), ranks)
+    _commit(mram, idx, view)
 
 
 def gather(system, mram: np.ndarray, src_off: int, dst_off: int,
-           n_per_dpu: int, root: int = 0):
+           n_per_dpu: int, root: int = 0,
+           dpus: Optional[Sequence[int]] = None):
     """Concatenate each DPU's ``n_per_dpu``-word shard at ``src_off``
     into ``D * n_per_dpu`` words at ``dst_off`` on ``root``."""
-    D = mram.shape[0]
-    _check_region(mram, src_off, n_per_dpu)
-    _check_region(mram, dst_off, D * n_per_dpu)
-    shards = mram[:, src_off:src_off + n_per_dpu].copy()
-    mram[root, dst_off:dst_off + D * n_per_dpu] = shards.reshape(-1)
+    idx = _normalize(mram, dpus)
+    D = mram.shape[0] if idx is None else len(idx)
+    view, fab, ranks, (r,) = _view(
+        system, mram, idx,
+        max(src_off + n_per_dpu, dst_off + D * n_per_dpu), root)
+    _check_region(view, src_off, n_per_dpu)
+    _check_region(view, dst_off, D * n_per_dpu)
+    shards = view[:, src_off:src_off + n_per_dpu].copy()
+    view[r, dst_off:dst_off + D * n_per_dpu] = shards.reshape(-1)
     if D > 1:
         _charge(system, "gather",
-                system.fabric.gather(4.0 * n_per_dpu, root),
-                4.0 * n_per_dpu * (D - 1))
+                fab.gather(4.0 * n_per_dpu, r),
+                4.0 * n_per_dpu * (D - 1), ranks)
+    _commit(mram, idx, view)
 
 
 def reduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
-           root: int = 0):
+           root: int = 0, dpus: Optional[Sequence[int]] = None):
     """Combine ``n`` words at ``off`` across DPUs onto ``root``."""
-    _check_region(mram, off, n)
-    D = mram.shape[0]
-    mram[root, off:off + n] = _reduce_rows(mram, off, n, op)
+    idx = _normalize(mram, dpus)
+    view, fab, ranks, (r,) = _view(system, mram, idx, off + n, root)
+    _check_region(view, off, n)
+    D = view.shape[0]
+    view[r, off:off + n] = _reduce_rows(view, off, n, op)
     if D > 1:
+        # D-1 remote contributions cross the link; root's stays local
         _charge(system, "reduce",
-                system.fabric.reduce(4.0 * n, root), 4.0 * n * D)
+                fab.reduce(4.0 * n, r), 4.0 * n * (D - 1), ranks)
+    _commit(mram, idx, view)
 
 
-def allreduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum"):
+def allreduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
+              dpus: Optional[Sequence[int]] = None):
     """Combine ``n`` words at ``off`` across DPUs; all DPUs get the result."""
-    _check_region(mram, off, n)
-    D = mram.shape[0]
-    mram[:, off:off + n] = _reduce_rows(mram, off, n, op)[None, :]
+    idx = _normalize(mram, dpus)
+    view, fab, ranks, _ = _view(system, mram, idx, off + n)
+    _check_region(view, off, n)
+    D = view.shape[0]
+    view[:, off:off + n] = _reduce_rows(view, off, n, op)[None, :]
     if D > 1:
         # nbytes counts one direction's payload, like every other primitive
         _charge(system, "allreduce",
-                system.fabric.allreduce(4.0 * n), 4.0 * n * D)
+                fab.allreduce(4.0 * n), 4.0 * n * D, ranks)
+    _commit(mram, idx, view)
 
 
 def allgather(system, mram: np.ndarray, src_off: int, dst_off: int,
-              n_per_dpu: int):
+              n_per_dpu: int, dpus: Optional[Sequence[int]] = None):
     """Every DPU ends with the concatenation of all shards at ``dst_off``."""
-    D = mram.shape[0]
-    _check_region(mram, src_off, n_per_dpu)
-    _check_region(mram, dst_off, D * n_per_dpu)
-    flat = mram[:, src_off:src_off + n_per_dpu].copy().reshape(-1)
-    mram[:, dst_off:dst_off + D * n_per_dpu] = flat[None, :]
+    idx = _normalize(mram, dpus)
+    D = mram.shape[0] if idx is None else len(idx)
+    view, fab, ranks, _ = _view(
+        system, mram, idx,
+        max(src_off + n_per_dpu, dst_off + D * n_per_dpu))
+    _check_region(view, src_off, n_per_dpu)
+    _check_region(view, dst_off, D * n_per_dpu)
+    flat = view[:, src_off:src_off + n_per_dpu].copy().reshape(-1)
+    view[:, dst_off:dst_off + D * n_per_dpu] = flat[None, :]
     if D > 1:
         _charge(system, "allgather",
-                system.fabric.allgather(4.0 * n_per_dpu),
-                4.0 * n_per_dpu * D * (D - 1))
+                fab.allgather(4.0 * n_per_dpu),
+                4.0 * n_per_dpu * D * (D - 1), ranks)
+    _commit(mram, idx, view)
 
 
 def alltoall(system, mram: np.ndarray, src_off: int, dst_off: int,
-             n_per_pair: int):
+             n_per_pair: int, dpus: Optional[Sequence[int]] = None):
     """Transpose: DPU d's j-th ``n_per_pair``-word block goes to DPU j's
     d-th block (src and dst regions are ``D * n_per_pair`` words)."""
-    D = mram.shape[0]
-    _check_region(mram, src_off, D * n_per_pair)
-    _check_region(mram, dst_off, D * n_per_pair)
-    blocks = mram[:, src_off:src_off + D * n_per_pair].copy()
+    idx = _normalize(mram, dpus)
+    D = mram.shape[0] if idx is None else len(idx)
+    view, fab, ranks, _ = _view(
+        system, mram, idx, max(src_off, dst_off) + D * n_per_pair)
+    _check_region(view, src_off, D * n_per_pair)
+    _check_region(view, dst_off, D * n_per_pair)
+    blocks = view[:, src_off:src_off + D * n_per_pair].copy()
     blocks = blocks.reshape(D, D, n_per_pair).transpose(1, 0, 2)
-    mram[:, dst_off:dst_off + D * n_per_pair] = blocks.reshape(D, -1)
+    view[:, dst_off:dst_off + D * n_per_pair] = blocks.reshape(D, -1)
     if D > 1:
         _charge(system, "alltoall",
-                system.fabric.alltoall(4.0 * n_per_pair),
-                4.0 * n_per_pair * D * (D - 1))
+                fab.alltoall(4.0 * n_per_pair),
+                4.0 * n_per_pair * D * (D - 1), ranks)
+    _commit(mram, idx, view)

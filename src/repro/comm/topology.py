@@ -10,6 +10,13 @@ Gomez-Luna et al. (arXiv:2105.03814) characterize on real hardware:
 * distinct **channels overlap** — the host threads across channels;
 * the path is **asymmetric**: host-write (h2d) runs at ~0.3 GB/s per DPU
   while host-read (d2h) runs at ~0.06 GB/s per DPU (paper Table I).
+
+Each scheduled transfer also reports its **per-rank link share**
+(``rank_busy``): the seconds during which rank *r*'s slice of its memory
+channel is tied up by this transfer.  The :mod:`repro.sched` scheduler
+turns those shares into ``chan<c>:rank<r>`` resources, so operations on
+*disjoint* rank sets can overlap even on one physical channel while
+operations touching the *same* rank still serialize.
 """
 from __future__ import annotations
 
@@ -30,6 +37,12 @@ class TransferEvent:
     seconds: float              # elapsed time (max over channels)
     total_bytes: float          # bytes moved across all DPUs
     channel_busy: Tuple[float, ...]  # per-channel busy seconds
+    #: per-rank link share: rank r's channel is tied up this long by the
+    #: transfer (0 for ranks that move no bytes).  A rank's share equals
+    #: its whole channel's busy time — within one event the channel
+    #: serializes over its ranks, so any rank it touches is unavailable
+    #: until the channel drains.
+    rank_busy: Tuple[float, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -79,6 +92,23 @@ class RankTopology:
         return [r for r in range(self.n_ranks)
                 if self.channel_of_rank(r) == channel]
 
+    def ranks_of(self, dpus: Sequence[int]) -> Tuple[int, ...]:
+        """Sorted ranks containing any DPU of ``dpus`` (subset launches
+        and rank-subset collectives hold only these ranks' resources)."""
+        for d in dpus:
+            if not 0 <= int(d) < self.n_dpus:
+                raise ValueError(f"dpu {d} outside [0, {self.n_dpus})")
+        return tuple(sorted({self.rank_of(int(d)) for d in dpus}))
+
+    def rank_sizes(self, dpus: Sequence[int]) -> Tuple[int, ...]:
+        """Members of ``dpus`` per participating rank (sorted by rank) —
+        the hierarchical fabric prices its intra-rank stage on these."""
+        counts = {}
+        for d in dpus:
+            counts[self.rank_of(int(d))] = counts.get(
+                self.rank_of(int(d)), 0) + 1
+        return tuple(counts[r] for r in sorted(counts))
+
     # ---- scheduling --------------------------------------------------------
     def _bw(self, direction: str) -> float:
         """Per-DPU bandwidth (bytes/s) for one direction."""
@@ -95,16 +125,23 @@ class RankTopology:
         ``per_dpu_bytes`` is either a scalar (every DPU moves that many
         bytes) or a (n_dpus,) vector. Rank time = max bytes in the rank /
         per-DPU bw; channel busy = sum of its ranks (serialized); elapsed
-        = max over channels (overlapped).
+        = max over channels (overlapped).  ``rank_busy[r]`` is rank r's
+        channel busy time when the rank moves bytes, else 0.
         """
         vec = np.broadcast_to(np.asarray(per_dpu_bytes, np.float64),
                               (self.n_dpus,))
         bw = self._bw(direction)
         busy = [0.0] * self.n_channels
+        per_rank = [0.0] * self.n_ranks
         for r in range(self.n_ranks):
             chunk = vec[self.dpu_slice(r)]
-            busy[self.channel_of_rank(r)] += float(chunk.max()) / bw
+            per_rank[r] = float(chunk.max()) / bw
+            busy[self.channel_of_rank(r)] += per_rank[r]
+        rank_busy = tuple(
+            busy[self.channel_of_rank(r)] if per_rank[r] > 0.0 else 0.0
+            for r in range(self.n_ranks))
         return TransferEvent(direction=direction,
                              seconds=max(busy),
                              total_bytes=float(vec.sum()),
-                             channel_busy=tuple(busy))
+                             channel_busy=tuple(busy),
+                             rank_busy=rank_busy)

@@ -44,14 +44,24 @@ class DPUConfig:
     # overlap across channels.
     n_ranks: int = 1
     n_channels: int = 1
+    # async-schedule contention: operations on *disjoint* rank sets of one
+    # physical channel (or fabric) overlap; a factor > 1 stretches the
+    # later arrival while they share the link.  1.0 = independent
+    # per-rank shares (and reproduces the PR 3 whole-system timelines).
+    channel_contention: float = 1.0
 
     # ----- inter-DPU fabric (pathfinding case study) --------------------------
     # "host": DPU->CPU->DPU bounce (today's hardware, §II-B)
     # "direct": hypothetical PIM-PIM interconnect (the paper's pathfinding
     #           hypothesis) with per-DPU link bandwidth + per-hop latency
+    # "hier": hierarchical rank-locality fabric — fast intra-rank stage
+    #         (intra_rank_* links) + cross-rank stage among rank leaders
+    #         (pim_link_* links)
     fabric: str = "host"
     pim_link_gbps: float = 1.0
     pim_link_latency_us: float = 0.1
+    intra_rank_gbps: float = 8.0
+    intra_rank_latency_us: float = 0.05
 
     # ----- case study #2: ILP features (additive D/R/S/F) --------------------
     forwarding: bool = False            # (D) data forwarding

@@ -22,7 +22,7 @@ scheduler can overlap transfers with kernels; resolve with
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -124,15 +124,35 @@ class PIMSystem:
         self.last_schedule = None
 
     def _chan_resources(self, ev: TransferEvent) -> Dict[str, float]:
-        return {f"chan{c}": busy
-                for c, busy in enumerate(ev.channel_busy) if busy > 0.0}
+        # per-rank link shares: a transfer holds `chan<c>:rank<r>` for
+        # every rank it touches, for that channel's busy time — so two
+        # transfers on the same rank serialize exactly like PR 3 while
+        # disjoint rank sets overlap (optionally stretched by the
+        # scheduler's contention factor)
+        topo = self.topology
+        return {f"chan{topo.channel_of_rank(r)}:rank{r}": busy
+                for r, busy in enumerate(ev.rank_busy) if busy > 0.0}
 
-    def _fabric_resources(self, seconds: float) -> Dict[str, float]:
-        if self.fabric.name == "direct":
-            return {"fabric": seconds}
-        # host bounce drives the AVX copy loops over every memory channel
-        return {f"chan{c}": seconds
-                for c in range(self.topology.n_channels)}
+    def _ranks_or_all(self, ranks: Optional[Sequence[int]]):
+        if ranks is None:
+            return range(self.topology.n_ranks)
+        ranks = sorted({int(r) for r in ranks})
+        if not ranks or ranks[0] < 0 or ranks[-1] >= self.topology.n_ranks:
+            raise ValueError(f"ranks {ranks} outside "
+                             f"[0, {self.topology.n_ranks})")
+        return ranks
+
+    def _fabric_resources(self, seconds: float,
+                          ranks: Optional[Sequence[int]] = None
+                          ) -> Dict[str, float]:
+        ranks = self._ranks_or_all(ranks)
+        if self.fabric.name in ("direct", "hier"):
+            return {f"fabric:rank{r}": seconds for r in ranks}
+        # host bounce drives the AVX copy loops over the involved ranks'
+        # channel shares
+        topo = self.topology
+        return {f"chan{topo.channel_of_rank(r)}:rank{r}": seconds
+                for r in ranks}
 
     def stream(self, name: str):
         """Submission context: with ``mode="async"`` commands issued inside
@@ -152,8 +172,11 @@ class PIMSystem:
 
     def sync(self) -> "ssched.Schedule":
         """Resolve all queued commands into the overlapped schedule and
-        stamp ``timeline.elapsed`` with its makespan."""
-        sched = ssched.schedule(self.runtime.queues)
+        stamp ``timeline.elapsed`` with its makespan.  The configured
+        ``channel_contention`` prices concurrent operations sharing a
+        physical channel (or the fabric) on disjoint rank shares."""
+        sched = ssched.schedule(self.runtime.queues,
+                                contention=self.cfg.channel_contention)
         self.timeline.elapsed = sched.makespan
         self.last_schedule = sched
         return sched
@@ -171,12 +194,15 @@ class PIMSystem:
         return self._submit(sq.D2H, "d2h", label, ev.seconds, ev.total_bytes,
                             self._chan_resources(ev))
 
-    def collective(self, kind: str, seconds: float,
-                   nbytes: float) -> "sq.Command":
+    def collective(self, kind: str, seconds: float, nbytes: float,
+                   ranks: Optional[Sequence[int]] = None) -> "sq.Command":
         """Charge one inter-DPU collective exchange (called by
-        ``repro.comm.collectives`` after it moved the payload)."""
+        ``repro.comm.collectives`` after it moved the payload).
+        ``ranks`` restricts the held link/fabric shares to the
+        participating ranks (default: all), letting collectives on
+        disjoint rank sets overlap in an async schedule."""
         return self._submit(sq.COLLECTIVE, "inter_dpu", kind, seconds, nbytes,
-                            self._fabric_resources(seconds))
+                            self._fabric_resources(seconds, ranks))
 
     def inter_dpu(self, bytes_per_dpu: float):
         """Legacy host bounce: ``bytes_per_dpu`` is the worst-case per-DPU
@@ -186,27 +212,51 @@ class PIMSystem:
         self.collective("bounce", self.fabric.bounce(bytes_per_dpu),
                         bytes_per_dpu)
 
-    def modeled_launch(self, name: str, seconds: float) -> "sq.Command":
+    def modeled_launch(self, name: str, seconds: float,
+                       ranks: Optional[Sequence[int]] = None
+                       ) -> "sq.Command":
         """Charge a kernel of known duration without running the engine —
-        for what-if schedule studies and tests.  Holds every rank's
-        compute slots, exactly like a real :meth:`launch`."""
+        for what-if schedule studies and tests.  Holds the compute slots
+        of ``ranks`` (default: every rank), exactly like a real
+        :meth:`launch` of the corresponding DPU subset."""
         return self._submit(
             sq.LAUNCH, "kernel", name, seconds, 0.0,
-            {f"rank{r}": seconds for r in range(self.topology.n_ranks)})
+            {f"rank{r}": seconds for r in self._ranks_or_all(ranks)})
 
     # ---- kernel launch ---------------------------------------------------------
     def launch(self, name: str, binary: Binary, args: np.ndarray,
                mram: np.ndarray, n_threads: Optional[int] = None,
-               wram_extra: Optional[np.ndarray] = None):
-        """Run one kernel on all DPUs.
+               wram_extra: Optional[np.ndarray] = None,
+               dpus: Optional[Sequence[int]] = None):
+        """Run one kernel on all DPUs (or on the ``dpus`` subset).
 
         args: (D, n_args) int32 scalars (host-written WRAM arg area).
         mram: (D, mram_words) int32 per-DPU bank images.
-        Returns (final_state, KernelReport)."""
+        Returns (final_state, KernelReport).
+
+        With ``dpus`` the kernel runs on that subset only and holds only
+        the involved ranks' compute slots, so another rank can stage or
+        compute concurrently in an async schedule.  ``args``/``mram``
+        still carry all D rows; the subset is deduplicated and sliced
+        out in **ascending DPU order** (row i of the returned state is
+        the i-th smallest DPU id, regardless of the order passed), and
+        the engine renumbers it 0..len(dpus)-1 (a kernel's
+        ``DPU_ID``/``N_DPUS`` registers see the subset)."""
         cfg = self.cfg
         D = cfg.n_dpus
         T = n_threads or cfg.n_tasklets
         assert args.shape[0] == D and mram.shape[0] == D
+        ranks = None
+        if dpus is not None:
+            sel = sorted({int(d) for d in dpus})
+            if not sel:
+                raise ValueError("dpus subset must not be empty")
+            ranks = self.topology.ranks_of(sel)  # validates the range
+            args, mram = args[sel], mram[sel]
+            if wram_extra is not None:
+                wram_extra = wram_extra[sel]
+            cfg = cfg.replace(n_dpus=len(sel))
+            D = len(sel)
         wram = np.zeros((D, max(ARG_BYTES // 4, args.shape[1])), np.int32)
         wram[:, :args.shape[1]] = args
         if wram_extra is not None:
@@ -225,9 +275,9 @@ class PIMSystem:
                 f"{name}: kernel hit max_cycles={cfg.max_cycles} "
                 f"(status={np.unique(st['status'])})")
         rep = stats.report_from_state(name, cfg, st, T)
-        # the kernel holds every rank's compute slots; transfers on the
-        # channel links are free to overlap it
-        self.modeled_launch(name, rep.kernel_seconds)
+        # the kernel holds the involved ranks' compute slots; transfers
+        # on the channel links (and other ranks) are free to overlap it
+        self.modeled_launch(name, rep.kernel_seconds, ranks=ranks)
         self.reports.append(rep)
         return st, rep
 

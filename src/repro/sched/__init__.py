@@ -8,11 +8,14 @@ the engine / :mod:`repro.comm` models:
   :class:`CommandQueue`\\ s with explicit :class:`Event` dependencies;
   ``QueueRuntime`` owns the streams and the in-order vs async policy.
 * :mod:`repro.sched.scheduler` — a deterministic list scheduler that
-  resolves the command DAG over the machine's resources (per-channel
-  links from :class:`~repro.comm.topology.RankTopology`, per-rank DPU
-  compute slots, the direct fabric) into an overlapped
-  :class:`Schedule`; transfers on one channel run under kernels holding
-  another rank's compute slots.
+  resolves the command DAG over the machine's resources (per-rank link
+  shares ``chan<c>:rank<r>`` from
+  :class:`~repro.comm.topology.RankTopology`, per-rank DPU compute
+  slots, per-rank fabric shares) into an overlapped :class:`Schedule`;
+  transfers on one rank run under kernels holding another rank's
+  compute slots, operations on disjoint rank sets overlap even on a
+  shared physical channel, and a configurable contention factor prices
+  that sharing.
 * :mod:`repro.sched.pipeline` — ``run_pipelined``: the double-buffered
   batch executor that stages batch *k+1*'s h2d and drains batch *k-1*'s
   d2h under batch *k*'s kernel.
@@ -27,10 +30,12 @@ from repro.sched.pipeline import run_pipelined
 from repro.sched.queue import (COLLECTIVE, D2H, EVENT_RECORD, EVENT_WAIT,
                                H2D, KINDS, LAUNCH, Command, CommandQueue,
                                Event, QueueRuntime)
-from repro.sched.scheduler import Schedule, ScheduledCommand, schedule
+from repro.sched.scheduler import (Schedule, ScheduledCommand,
+                                   resource_group, schedule)
 
 __all__ = [
     "Command", "CommandQueue", "Event", "QueueRuntime",
     "H2D", "D2H", "LAUNCH", "COLLECTIVE", "EVENT_WAIT", "EVENT_RECORD",
-    "KINDS", "Schedule", "ScheduledCommand", "schedule", "run_pipelined",
+    "KINDS", "Schedule", "ScheduledCommand", "schedule", "resource_group",
+    "run_pipelined",
 ]

@@ -23,7 +23,7 @@ from typing import Dict, List, Mapping, Optional, Tuple
 # ---- command kinds ---------------------------------------------------------
 H2D = "H2D"                    # host write to DPU MRAM
 D2H = "D2H"                    # host read from DPU MRAM
-LAUNCH = "LAUNCH"              # kernel on (all ranks of) the system
+LAUNCH = "LAUNCH"              # kernel on a DPU/rank subset (default: all)
 COLLECTIVE = "COLLECTIVE"      # inter-DPU exchange through the fabric
 EVENT_WAIT = "EVENT_WAIT"      # block this queue until an event completes
 EVENT_RECORD = "EVENT_RECORD"  # mark "everything before me in this queue"
@@ -58,10 +58,10 @@ class Command:
     """One unit of queued work plus its modeled cost.
 
     ``seconds`` is the command's elapsed time; ``resources`` maps a
-    hardware resource name (``chan<i>`` link, ``rank<r>`` compute slot,
-    ``fabric``) to the busy seconds this command holds it — each entry
-    must be <= ``seconds`` (a command cannot occupy a resource after it
-    finished)."""
+    hardware resource name (``chan<c>:rank<r>`` link share, ``rank<r>``
+    compute slot, ``fabric:rank<r>`` interconnect share) to the busy
+    seconds this command holds it — each entry must be <= ``seconds``
+    (a command cannot occupy a resource after it finished)."""
 
     kind: str
     label: str

@@ -1,14 +1,17 @@
-"""PrIM-style workload registry (16 workloads, paper Table II)."""
+"""PrIM-style workload registry (paper Table II + the SSORT
+distributed sample sort, the alltoall pathfinding workload)."""
 from repro.workloads.graph import BFS, NW
 from repro.workloads.histo import HST_L, HST_S
 from repro.workloads.linalg import GEMV, MLP, SpMV, TRNS
 from repro.workloads.search import BS, TS
+from repro.workloads.sort import SSORT
 from repro.workloads.streaming import RED, SCAN_RSS, SCAN_SSA, SEL, UNI, VA
 
 ALL = {
     w.name: w for w in (
         BFS(), BS(), GEMV(), HST_L(), HST_S(), MLP(), NW(), RED(),
-        SCAN_RSS(), SCAN_SSA(), SEL(), SpMV(), TRNS(), TS(), UNI(), VA(),
+        SCAN_RSS(), SCAN_SSA(), SEL(), SpMV(), SSORT(), TRNS(), TS(),
+        UNI(), VA(),
     )
 }
 

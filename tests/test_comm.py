@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 import repro.comm as comm
-from repro.comm.fabric import DirectFabric, HostBounceFabric
+from repro.comm.fabric import (DirectFabric, HierarchicalFabric,
+                               HostBounceFabric)
 from repro.comm.topology import RankTopology
 from repro.core.config import DPUConfig
 from repro.core.host import PIMSystem
@@ -193,6 +194,116 @@ def test_host_bounce_scales_with_ranks_per_channel():
     comm.allreduce(s1, m1, 0, 64)
     comm.allreduce(s2, m2, 0, 64)
     assert s2.timeline.inter_dpu == pytest.approx(2 * s1.timeline.inter_dpu)
+
+
+def test_reduce_root_leg_consistent_with_gather():
+    # the root's own contribution never crosses the link (same convention
+    # as broadcast/scatter/gather): with root alone on rank 0 of a shared
+    # channel, the up leg charges only the OTHER rank's read-back
+    s = PIMSystem(DPUConfig(n_dpus=2, n_ranks=2, n_channels=1))
+    m = _img(D=2)
+    want = m[:, 0:8].sum(0, dtype=np.int32)
+    comm.reduce(s, m, 0, 8, root=0)
+    assert (m[0, 0:8] == want).all()
+    w = 4 * 8
+    assert s.timeline.inter_dpu == pytest.approx(w / D2H_BW + w / H2D_BW)
+
+
+def test_reduce_closed_form_single_rank():
+    s, m = _sys(), _img()
+    comm.reduce(s, m, 0, 8, root=1)
+    w = 4 * 8
+    # up: the 3 non-root DPUs read back in parallel; down: root only
+    assert s.timeline.inter_dpu == pytest.approx(w / D2H_BW + w / H2D_BW)
+
+
+def test_hier_fabric_is_a_two_stage_composition():
+    topo = RankTopology(n_dpus=8, n_ranks=2, n_channels=2)
+    hier = HierarchicalFabric(topo, intra_gbps=8.0, intra_latency_s=5e-8,
+                              inter_gbps=1.0, inter_latency_s=1e-7)
+    intra = DirectFabric(4, 8.0, 5e-8)    # P = 4 members per rank
+    inter = DirectFabric(2, 1.0, 1e-7)    # R = 2 rank leaders
+    w = 4096.0
+    assert hier.broadcast(w) == pytest.approx(
+        inter.broadcast(w) + intra.broadcast(w))
+    assert hier.reduce(w) == pytest.approx(
+        intra.reduce(w) + inter.reduce(w))
+    assert hier.allreduce(w) == pytest.approx(
+        intra.reduce(w) + inter.allreduce(w) + intra.broadcast(w))
+    assert hier.gather(w) == pytest.approx(
+        intra.gather(w) + inter.gather(4 * w))
+    assert hier.scatter(w) == pytest.approx(
+        inter.scatter(4 * w) + intra.scatter(w))
+    assert hier.allgather(w) == pytest.approx(
+        intra.gather(w) + inter.allgather(4 * w) + intra.broadcast(8 * w))
+    assert hier.alltoall(w) == pytest.approx(
+        intra.alltoall(w) + intra.gather(4 * w)
+        + inter.alltoall(16 * w) + intra.scatter(4 * w))
+
+
+def test_hier_fabric_degenerate_shapes():
+    # one DPU per rank -> pure cross-rank fabric
+    t1 = RankTopology(n_dpus=4, n_ranks=4, n_channels=2)
+    h1 = HierarchicalFabric(t1, inter_gbps=1.0, inter_latency_s=1e-7)
+    d = DirectFabric(4, 1.0, 1e-7)
+    w = 1024.0
+    assert h1.allreduce(w) == pytest.approx(d.allreduce(w))
+    assert h1.broadcast(w) == pytest.approx(d.broadcast(w))
+    # a single rank -> pure intra-rank fabric
+    t2 = RankTopology(n_dpus=4, n_ranks=1)
+    h2 = HierarchicalFabric(t2, intra_gbps=8.0, intra_latency_s=5e-8)
+    di = DirectFabric(4, 8.0, 5e-8)
+    assert h2.broadcast(w) == pytest.approx(di.broadcast(w))
+    assert h2.alltoall(w) == pytest.approx(di.alltoall(w))
+
+
+def test_hier_system_end_to_end():
+    s = PIMSystem(DPUConfig(n_dpus=8, n_ranks=2, n_channels=2,
+                            fabric="hier"))
+    m = _img(D=8)
+    want = m[:, 0:8].sum(0, dtype=np.int32)
+    comm.allreduce(s, m, 0, 8)
+    assert (m[:, 0:8] == want[None, :]).all()
+    assert s.timeline.inter_dpu > 0
+    cmd = s.runtime.queue("main").commands[-1]
+    assert set(cmd.resources) == {"fabric:rank0", "fabric:rank1"}
+
+
+def test_subset_collective_moves_subset_rows_only():
+    s = PIMSystem(DPUConfig(n_dpus=4, n_ranks=2, n_channels=2))
+    m = _img()
+    ref = m.copy()
+    comm.broadcast(s, m, 0, 8, root=1, dpus=[0, 1])
+    assert (m[:2, 0:8] == ref[1, 0:8][None, :]).all()
+    assert (m[2:] == ref[2:]).all()             # non-members untouched
+    # charged like a 2-DPU exchange holding only rank 0's link share
+    cmd = s.runtime.queue("main").commands[-1]
+    assert set(cmd.resources) == {"chan0:rank0"}
+
+
+def test_subset_collective_validation():
+    s, m = _sys(), _img()
+    with pytest.raises(ValueError, match="not in dpus"):
+        comm.gather(s, m, 0, 8, 2, root=3, dpus=[0, 1])
+    with pytest.raises(ValueError):
+        comm.allreduce(s, m, 0, 8, dpus=[])
+    with pytest.raises(ValueError):
+        comm.allreduce(s, m, 0, 8, dpus=[0, 9])
+    assert s.timeline.events == []              # nothing charged
+
+
+def test_fabric_subset_pricing():
+    topo = RankTopology(n_dpus=8, n_ranks=2, n_channels=1)
+    f = HostBounceFabric(topo)
+    w = 1024.0
+    # a one-rank subset rides only its own rank's channel slot ...
+    assert f.subset(range(4)).allreduce(w) == \
+        pytest.approx(w / D2H_BW + w / H2D_BW)
+    # ... while the full system serializes both ranks on the channel
+    assert f.allreduce(w) == pytest.approx(2 * w / D2H_BW + 2 * w / H2D_BW)
+    d = DirectFabric(8, 1.0, 1e-7)
+    assert d.subset(range(4)).allreduce(w) == \
+        pytest.approx(DirectFabric(4, 1.0, 1e-7).allreduce(w))
 
 
 def test_direct_fabric_closed_forms():

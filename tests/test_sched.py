@@ -1,8 +1,10 @@
 """repro.sched: queue/event/scheduler invariants, in-order equivalence
-with the serialized (PR 2) timeline, and pipelined workload oracles."""
+with the serialized (PR 2) timeline, per-rank execution (subset
+launches, link shares, contention), and pipelined workload oracles."""
 import numpy as np
 import pytest
 
+import repro.comm as comm
 import repro.workloads as wl
 from repro.core.config import DPUConfig
 from repro.core.host import PIMSystem
@@ -162,6 +164,169 @@ def test_deterministic_tie_break_by_submission_order():
                               resources={"chan0": 1.0})
     sched = s.sync()
     assert sched.span(cb)[0] == 0.0 and sched.span(ca)[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# per-rank execution model: subset launches, link shares, contention
+# ---------------------------------------------------------------------------
+
+def test_duplicate_queue_names_rejected():
+    # two same-named queues would silently clobber each other's cursor
+    qa, qb = sq.CommandQueue("q"), sq.CommandQueue("q")
+    qa.submit(sq.Command(kind=sq.H2D, label="a", seconds=1.0, seq=0,
+                         queue="q"))
+    qb.submit(sq.Command(kind=sq.H2D, label="b", seconds=1.0, seq=1,
+                         queue="q"))
+    with pytest.raises(ValueError, match="duplicate queue names"):
+        ssched.schedule([qa, qb])
+
+
+def test_subset_launches_on_distinct_ranks_overlap():
+    s = _sys(D=8, ranks=2, chans=2)
+    with s.stream("a"):
+        ka = s.modeled_launch("ka", 1.0, ranks=[0])
+    with s.stream("b"):
+        kb = s.modeled_launch("kb", 1.0, ranks=[1])
+    sched = s.sync()
+    assert ka.resources == {"rank0": 1.0}
+    assert kb.resources == {"rank1": 1.0}
+    assert sched.makespan == pytest.approx(1.0)    # one rank per kernel
+
+
+def test_whole_system_launches_still_serialize():
+    s = _sys(D=8, ranks=2, chans=2)
+    with s.stream("a"):
+        s.modeled_launch("ka", 1.0)
+    with s.stream("b"):
+        s.modeled_launch("kb", 1.0)
+    assert s.sync().makespan == pytest.approx(2.0)
+
+
+def test_modeled_launch_rank_validation():
+    s = _sys(D=8, ranks=2, chans=2)
+    with pytest.raises(ValueError):
+        s.modeled_launch("k", 1.0, ranks=[2])
+    with pytest.raises(ValueError):
+        s.modeled_launch("k", 1.0, ranks=[])
+
+
+def test_real_subset_launch_runs_subset_and_holds_its_rank():
+    from repro.core.asm import Program
+    s = _sys(D=4, ranks=2, chans=2, n_tasklets=4)
+    p = Program("noop", 4)
+    p.stop()
+    binary = p.binary(s.cfg.iram_instrs)
+    args = np.zeros((4, 1), np.int32)
+    mram = np.zeros((4, 64), np.int32)
+    st, rep = s.launch("noop", binary, args, mram, n_threads=4, dpus=[2, 3])
+    assert st["mram"].shape[0] == 2 and rep.n_dpus == 2
+    cmd = [c for q in s.runtime.queues for c in q.commands][-1]
+    assert set(cmd.resources) == {"rank1"}     # DPUs 2,3 live on rank 1
+    with pytest.raises(ValueError):
+        s.launch("noop", binary, args, mram, n_threads=4, dpus=[7])
+
+
+def test_disjoint_rank_transfers_overlap_on_one_channel():
+    # NEW vs PR 3: one physical channel, disjoint rank sets -> overlap
+    s = _sys(D=8, ranks=2, chans=1)
+    v0 = np.zeros(8)
+    v0[:4] = 1e6
+    v1 = np.zeros(8)
+    v1[4:] = 1e6
+    with s.stream("a"):
+        s.h2d(v0)
+    with s.stream("b"):
+        s.h2d(v1)
+    one = 1e6 / H2D_BW
+    assert s.sync().makespan == pytest.approx(one)
+    assert s.timeline.total == pytest.approx(2 * one)
+
+
+def test_contention_factor_prices_link_sharing():
+    one = 1e6 / H2D_BW
+    mks = []
+    for f in (1.0, 1.5, 2.0, 4.0):
+        s = _sys(D=8, ranks=2, chans=1, channel_contention=f)
+        v0 = np.zeros(8)
+        v0[:4] = 1e6
+        v1 = np.zeros(8)
+        v1[4:] = 1e6
+        with s.stream("a"):
+            s.h2d(v0)
+        with s.stream("b"):
+            s.h2d(v1)
+        mks.append(s.sync().makespan)
+    assert mks[0] == pytest.approx(one)            # independent shares
+    assert mks[2] == pytest.approx(2.0 * one)      # later arrival pays 2x
+    assert all(b >= a - 1e-15 for a, b in zip(mks, mks[1:]))
+
+
+def test_contention_never_decreases_makespan_property():
+    # property-style: random rank-subset command mixes, increasing factor
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        ops = [(int(rng.integers(3)), int(rng.integers(3)),
+                int(rng.integers(2)), float(rng.uniform(0.1, 1.0)))
+               for _ in range(12)]
+
+        def makespan(f, ops=ops):
+            s = _sys(D=8, ranks=2, chans=1, channel_contention=f)
+            for stream_i, kind, rank, amount in ops:
+                with s.stream(f"s{stream_i}"):
+                    if kind == 0:
+                        vec = np.zeros(8)
+                        vec[s.topology.dpu_slice(rank)] = amount * 1e6
+                        s.h2d(vec)
+                    elif kind == 1:
+                        s.modeled_launch("k", amount * 1e-3, ranks=[rank])
+                    else:
+                        s.collective("x", amount * 1e-3, 0.0, ranks=[rank])
+            return s.sync().makespan
+
+        ms = [makespan(f) for f in (1.0, 1.3, 2.0, 4.0)]
+        assert all(b >= a - 1e-12 for a, b in zip(ms, ms[1:])), ms
+
+
+def test_contention_validation():
+    with pytest.raises(ValueError, match="contention"):
+        ssched.schedule([], contention=0.5)
+
+
+def test_exposed_uses_interval_union():
+    # two same-phase kernels overlap: summing their busy seconds would
+    # over-count and clamp exposed() to the wrong value
+    s = _sys(D=8, ranks=2, chans=1)
+    with s.stream("a"):
+        s.modeled_launch("ka", 1.0, ranks=[0])           # [0.0, 1.0]
+    with s.stream("b"):
+        s.runtime.submit(sq.H2D, "x", 0.5, phase="h2d",
+                         resources={"chan0:rank1": 0.5})  # [0.0, 0.5]
+        s.modeled_launch("kb", 1.0, ranks=[1])           # [0.5, 1.5]
+        s.runtime.submit(sq.D2H, "y", 1.0, phase="d2h",
+                         resources={"chan0:rank1": 1.0})  # [1.5, 2.5]
+    sched = s.sync()
+    assert sched.makespan == pytest.approx(2.5)
+    assert sched.covered("kernel") == pytest.approx(1.5)  # union, not 2.0
+    assert sched.exposed("kernel") == pytest.approx(1.0)
+    # the busy-sum reference is still available (and still double counts)
+    assert sched.phase_busy()["kernel"] == pytest.approx(2.0)
+
+
+def test_disjoint_rank_collectives_overlap():
+    s = _sys(D=8, ranks=2, chans=2)
+    img = np.arange(8 * 64, dtype=np.int32).reshape(8, 64)
+    want0 = img[:4, :16].sum(0, dtype=np.int32).copy()
+    want1 = img[4:, :16].sum(0, dtype=np.int32).copy()
+    with s.stream("a"):
+        comm.allreduce(s, img, 0, 16, dpus=range(4))
+    with s.stream("b"):
+        comm.allreduce(s, img, 0, 16, dpus=range(4, 8))
+    sched = s.sync()
+    assert (img[:4, :16] == want0).all() and (img[4:, :16] == want1).all()
+    secs = [c.seconds for q in s.runtime.queues for c in q.commands]
+    # overlap: the makespan is the larger collective, not their sum
+    assert sched.makespan == pytest.approx(max(secs))
+    assert s.timeline.total == pytest.approx(sum(secs))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,59 @@
+"""SSORT distributed sample sort: np.sort oracle on every fabric
+backend, alltoall phase attribution, and exchange-cost ordering.
+(The workload itself raises on any oracle mismatch, so a passing run IS
+the data-correctness check.)"""
+import numpy as np
+import pytest
+
+import repro.workloads as wl
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.workloads.sort import MERGE_MAX_WORDS, SORT_MAX_N
+
+
+def _sys(D=2, ranks=2, fabric="host", **kw):
+    return PIMSystem(DPUConfig(n_dpus=D, n_ranks=ranks,
+                               n_channels=min(ranks, 2), n_tasklets=8,
+                               mram_bytes=1 << 21, fabric=fabric, **kw))
+
+
+@pytest.mark.parametrize("fabric", ["host", "direct", "hier"])
+def test_ssort_oracle_every_fabric(fabric):
+    s = _sys(fabric=fabric)
+    st, rep = wl.get("SSORT").run(s, n_threads=8, scale=0.02)
+    assert rep.cycles > 0 and rep.n_dpus == 2
+    by = s.timeline.by_label("inter_dpu")
+    assert by.get("alltoall", 0) > 0     # counts + buckets via alltoall
+    assert by.get("gather", 0) > 0       # splitter samples up
+    assert by.get("broadcast", 0) > 0    # splitters back down
+    assert "bounce" not in by            # no legacy flat exchange
+
+
+def test_ssort_single_dpu_degenerates_to_local_sort():
+    s = _sys(D=1, ranks=1)
+    wl.get("SSORT").run(s, n_threads=8, scale=0.02)
+    assert s.timeline.inter_dpu == 0.0
+
+
+def test_ssort_exchange_cheaper_on_pathfinding_fabrics():
+    xchg = {}
+    for fabric in ("host", "direct", "hier"):
+        s = _sys(fabric=fabric)
+        wl.get("SSORT").run(s, n_threads=8, scale=0.02)
+        xchg[fabric] = s.timeline.inter_dpu
+    assert xchg["direct"] < xchg["host"]
+    assert xchg["hier"] < xchg["host"]
+
+
+def test_ssort_caps_are_enforced():
+    assert wl.get("SSORT").n_elems(1e9) <= SORT_MAX_N
+    assert MERGE_MAX_WORDS >= SORT_MAX_N  # room for received imbalance
+    with pytest.raises(ValueError, match="n_threads"):
+        wl.get("SSORT").run(_sys(), n_threads=7, scale=0.02)
+
+
+@pytest.mark.slow
+def test_ssort_four_dpus_multiple_seeds():
+    for seed in (0, 3):
+        s = _sys(D=4, ranks=2)
+        wl.get("SSORT").run(s, n_threads=8, scale=0.05, seed=seed)
