@@ -1,0 +1,239 @@
+"""Persistent compiled-engine runtime: every simulation enters XLA here.
+
+Before this module, each ``engine.run`` / ``simt.run`` call rebuilt the
+step closure and a fresh ``@jax.jit`` wrapper, so *every* launch paid the
+full 14-stage-pipeline retrace (~seconds) — iterated workloads (per-level
+BFS, NW sweeps, SSORT's three kernel phases) and every distinct
+``launch(dpus=...)`` subset size recompiled from scratch.
+
+The cache kills that three ways:
+
+* **Memoized drivers** — the jitted ``while_loop`` driver is memoized on
+  ``(DPUConfig.static_key(), program bucket, DPU bucket, tasklet count,
+  MRAM words, backend)``.  A warm relaunch is a dictionary hit plus one
+  XLA dispatch.
+* **Traced binaries** — the instruction image (the six SoA int32 vectors
+  of :class:`isa.Binary`) is passed as *traced operands* instead of
+  baked-in closure constants, so two different kernels of the same
+  padded shape share one executable.
+* **Shape buckets** — the program axis and the DPU axis are padded to
+  power-of-two buckets with masked inactive lanes (``DONE`` status,
+  ``STOP``-filled program tail), so ``host.launch(dpus=...)`` subsets of
+  any size — and sweeps over system sizes — land on a handful of
+  executables instead of one per exact shape.  Padded DPU lanes never
+  issue, never touch DRAM, and are sliced off before results are
+  returned, so bucketed runs are bit-exact vs. unpadded ones.
+
+State buffers are donated to XLA (they are rebuilt per launch), avoiding
+a full state copy per step-loop entry.
+
+Knobs: :data:`PROGRAM_BUCKET_FLOOR` / :data:`DPU_BUCKET_FLOOR` set the
+smallest bucket (smaller floors = tighter shapes but more executables).
+:func:`prewarm` compiles ahead of time; :func:`stats` exposes the
+hit/miss/compile counters the tests assert on.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, isa, simt
+from repro.core.config import DPUConfig
+
+#: smallest padded program length (instruction slots)
+PROGRAM_BUCKET_FLOOR = 64
+#: smallest padded DPU-axis width
+DPU_BUCKET_FLOOR = 1
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def program_bucket(n_instrs: int, capacity: int) -> int:
+    """Padded program length for an ``n_instrs``-long kernel.
+
+    One slot past the program is always included (when capacity allows)
+    so a fall-through off the last instruction still lands on the
+    assembler's ``STOP`` padding, exactly as with full-capacity images."""
+    return min(int(capacity), pow2_bucket(n_instrs + 1, PROGRAM_BUCKET_FLOOR))
+
+
+def dpu_bucket(n_dpus: int) -> int:
+    return pow2_bucket(n_dpus, DPU_BUCKET_FLOOR)
+
+
+@dataclass
+class _Entry:
+    """One cached executable: a jitted binary-agnostic while-loop driver."""
+
+    go: Callable
+    key: tuple
+    launches: int = 0
+
+    def xla_cache_size(self) -> Optional[int]:
+        """Number of traces the underlying jit has seen (1 == the shape
+        bucket is doing its job); None if the runtime doesn't expose it."""
+        try:
+            return self.go._cache_size()
+        except AttributeError:
+            return None
+
+
+_LOCK = threading.Lock()
+_ENTRIES: Dict[tuple, _Entry] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def _make_go(cfg: DPUConfig, backend: str) -> Callable:
+    mod = simt if backend == "simt" else engine
+    step = mod.make_step_traced(cfg)
+    cond = engine.make_cond(cfg)
+
+    def drive(ir, st):
+        return jax.lax.while_loop(cond, lambda s: step(ir, s), st)
+
+    # the state is rebuilt per launch -> donate it; the instruction image
+    # is reused across launches -> never donated
+    return jax.jit(drive, donate_argnums=(1,))
+
+
+def _get_entry(cfg: DPUConfig, backend: str, P: int, Dp: int, T: int,
+               M: int) -> _Entry:
+    global _HITS, _MISSES
+    key = (backend, cfg.static_key(), P, Dp, T, M)
+    with _LOCK:
+        entry = _ENTRIES.get(key)
+        if entry is None:
+            _MISSES += 1
+            entry = _Entry(go=_make_go(cfg, backend), key=key)
+            _ENTRIES[key] = entry
+        else:
+            _HITS += 1
+        return entry
+
+
+def _padded_state(cfg: DPUConfig, backend: str, binary, wram_init, mram_init,
+                  T: int, Dp: int, all_done: bool = False):
+    """Initial state padded to the DPU bucket, masked lanes DONE."""
+    mod = simt if backend == "simt" else engine
+    D = cfg.n_dpus
+    if Dp != D:
+        wram_init = np.concatenate(
+            [wram_init, np.zeros((Dp - D, wram_init.shape[1]), np.int32)])
+        mram_init = np.concatenate(
+            [mram_init, np.zeros((Dp - D, mram_init.shape[1]), np.int32)])
+        cfg = cfg.replace(n_dpus=Dp)
+    st = mod.make_state_np(cfg, binary, wram_init, mram_init, T)
+    if Dp != D:
+        st["status"][D:] = engine.DONE          # masked lanes never issue
+        st["regs"][:, :, isa.R_NDPU] = D        # kernels see the logical size
+    if all_done:
+        st["status"][:] = engine.DONE
+    return jax.tree_util.tree_map(jnp.asarray, st)
+
+
+def _launch(cfg: DPUConfig, binary, wram_init, mram_init, T: int,
+            backend: str, pad: bool, all_done: bool = False):
+    if backend == "simt":
+        assert cfg.simt_width > 0, "simt backend needs simt_width > 0"
+        assert T % cfg.simt_width == 0, \
+            "n_tasklets must be a multiple of warp width"
+    wram_init = np.ascontiguousarray(np.asarray(wram_init, np.int32))
+    mram_init = np.ascontiguousarray(np.asarray(mram_init, np.int32))
+    capacity = binary.opcode.shape[0]
+    P = program_bucket(binary.n_instrs, capacity) if pad else capacity
+    Dp = dpu_bucket(cfg.n_dpus) if pad else cfg.n_dpus
+    st0 = _padded_state(cfg, backend, binary, wram_init, mram_init, T, Dp,
+                        all_done=all_done)
+    entry = _get_entry(cfg, backend, P, Dp, T, mram_init.shape[1])
+    ir = tuple(jnp.asarray(a[:P]) for a in binary.arrays)
+    out = entry.go(ir, st0)
+    entry.launches += 1
+    return entry, out
+
+
+def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads: int = None,
+        backend: str = None, pad: bool = True) -> Dict[str, np.ndarray]:
+    """Simulate ``binary`` to completion through the compiled-engine cache.
+
+    The launch path behind ``engine.run`` and ``simt.run``:
+
+    * ``backend`` — ``"scalar"`` | ``"simt"`` (default: by
+      ``cfg.simt_width``);
+    * ``pad=False`` disables shape bucketing (exact shapes; used by the
+      bit-exactness tests as the unpadded reference).
+
+    Returns the final state as a host-numpy pytree sliced back to the
+    logical ``cfg.n_dpus`` rows."""
+    if backend is None:
+        backend = "simt" if cfg.simt_width > 0 else "scalar"
+    T = n_threads or cfg.n_tasklets
+    _, out = _launch(cfg, binary, wram_init, mram_init, T, backend, pad)
+    out = jax.tree_util.tree_map(np.asarray, out)
+    if out["status"].shape[0] != cfg.n_dpus:
+        out = jax.tree_util.tree_map(lambda x: x[:cfg.n_dpus], out)
+    return out
+
+
+def prewarm(cfg: DPUConfig, binary, mram_words: int = None,
+            n_threads: int = None, backend: str = None) -> tuple:
+    """Compile (or look up) the executable a later :func:`run` will use,
+    without simulating anything: launches an all-``DONE`` state, so the
+    while-loop exits at the first predicate check but XLA still traces
+    and compiles the full cycle step.  Returns the cache key.
+
+    ``mram_words`` must match the MRAM image width of the real launch
+    (default: ``cfg.mram_words``)."""
+    if backend is None:
+        backend = "simt" if cfg.simt_width > 0 else "scalar"
+    T = n_threads or cfg.n_tasklets
+    M = mram_words or cfg.mram_words
+    wram = np.zeros((cfg.n_dpus, 1), np.int32)
+    mram = np.zeros((cfg.n_dpus, M), np.int32)
+    entry, out = _launch(cfg, binary, wram, mram, T, backend, pad=True,
+                         all_done=True)
+    jax.block_until_ready(out)
+    return entry.key
+
+
+# ---------------------------------------------------------------------------
+# introspection (tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def stats() -> Dict[str, int]:
+    """Cache counters.  ``misses`` counts executable *builds* — a
+    same-shape relaunch must leave it unchanged."""
+    with _LOCK:
+        return {
+            "entries": len(_ENTRIES),
+            "hits": _HITS,
+            "misses": _MISSES,
+            "launches": sum(e.launches for e in _ENTRIES.values()),
+        }
+
+
+def cache_info():
+    """Per-executable detail: key, launch count, XLA trace count."""
+    with _LOCK:
+        return [{"key": e.key, "launches": e.launches,
+                 "xla_cache_size": e.xla_cache_size()}
+                for e in _ENTRIES.values()]
+
+
+def clear():
+    """Drop every cached executable and zero the counters (tests)."""
+    global _HITS, _MISSES
+    with _LOCK:
+        _ENTRIES.clear()
+        _HITS = 0
+        _MISSES = 0

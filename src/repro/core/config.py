@@ -5,6 +5,18 @@ import dataclasses
 from dataclasses import dataclass
 
 
+# host/comm-layer knobs plus the axes the compile cache buckets or keys
+# separately — everything a traced engine step never reads (see
+# DPUConfig.static_key)
+_NON_ENGINE_FIELDS = frozenset({
+    "n_dpus", "n_tasklets", "mram_bytes", "iram_instrs",
+    "h2d_gbps_per_dpu", "d2h_gbps_per_dpu",
+    "n_ranks", "n_channels", "channel_contention",
+    "fabric", "pim_link_gbps", "pim_link_latency_us",
+    "intra_rank_gbps", "intra_rank_latency_us",
+})
+
+
 @dataclass(frozen=True)
 class DPUConfig:
     # ----- system size ------------------------------------------------------
@@ -102,6 +114,25 @@ class DPUConfig:
 
     def replace(self, **kw) -> "DPUConfig":
         return dataclasses.replace(self, **kw)
+
+    def static_key(self) -> tuple:
+        """Hashable identity of every field that shapes the *traced* engine.
+
+        This is the config part of the compiled-engine cache key
+        (``repro.core.compile_cache``): two configs with equal
+        ``static_key()`` lower to the same XLA program and may share one
+        executable.  Host/interconnect knobs (transfer rates, rank
+        topology, fabric pricing) never enter the traced step, and the
+        axes the cache buckets or keys separately are excluded here:
+        ``n_dpus`` (padded to a power-of-two bucket), ``n_tasklets``
+        (the effective thread count is keyed explicitly), ``mram_bytes``
+        (the actual MRAM image width is keyed) and ``iram_instrs``
+        (the program length is bucketed).  New fields are conservatively
+        included by default."""
+        return tuple(
+            (f.name, getattr(self, f.name))
+            for f in dataclasses.fields(self)
+            if f.name not in _NON_ENGINE_FIELDS)
 
     # ----- derived -----------------------------------------------------------
     @property

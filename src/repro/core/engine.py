@@ -48,8 +48,30 @@ MAX_DMA_BYTES = 2048  # UPMEM DMA transfer limit
 # ---------------------------------------------------------------------------
 
 
+def select_tree(op, results, lo=0, hi=None):
+    """Balanced binary ``jnp.where`` tree dispatching ``op`` over
+    ``results[lo:hi]`` (result ``i`` for ``op == lo + i``).
+
+    Replaces a flat N-way ``jnp.select`` chain: log2(N) select depth
+    instead of N predicates + an N-deep select, which lowers to a much
+    smaller XLA graph in the per-cycle hot loop.  Out-of-range ``op``
+    clamps to the nearest end — callers mask those lanes."""
+    if hi is None:
+        hi = lo + len(results)
+    assert len(results) == hi - lo
+    if hi - lo == 1:
+        return results[0]
+    mid = (lo + hi) // 2
+    return jnp.where(op < mid,
+                     select_tree(op, results[:mid - lo], lo, mid),
+                     select_tree(op, results[mid - lo:], mid, hi))
+
+
 def alu_exec(op, a, b):
-    """Vectorized 12-way ALU.  op/a/b: int32 arrays of equal shape."""
+    """Vectorized 12-way ALU.  op/a/b: int32 arrays of equal shape.
+
+    Lanes whose ``op`` is outside [0, 12) (non-ALU opcodes) produce an
+    arbitrary value; the engine masks the result on ``op <= Op.SLTU``."""
     sh = b.astype(jnp.uint32) & 31
     au = a.astype(jnp.uint32)
     bu = b.astype(jnp.uint32)
@@ -68,7 +90,7 @@ def alu_exec(op, a, b):
         (a < b).astype(jnp.int32),
         (au < bu).astype(jnp.int32),
     ]
-    return jnp.select([op == i for i in range(12)], results, jnp.int32(0))
+    return select_tree(op, results)
 
 
 # ---------------------------------------------------------------------------
@@ -76,8 +98,11 @@ def alu_exec(op, a, b):
 # ---------------------------------------------------------------------------
 
 
-def make_state(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
-               n_threads: int = None) -> Dict:
+def make_state_np(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
+                  n_threads: int = None) -> Dict:
+    """Initial microarchitectural state as a host-numpy pytree (the
+    compile cache pads/masks this before device placement;
+    :func:`make_state` is the device-array convenience wrapper)."""
     D = cfg.n_dpus
     T = n_threads or cfg.n_tasklets
     W = cfg.wram_words
@@ -150,7 +175,14 @@ def make_state(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
         "ts_buf": np.zeros((D, cfg.timeseries_len), np.float32),
         "ts_acc": np.zeros(D, np.float32),
     }
-    return jax.tree_util.tree_map(jnp.asarray, st)
+    return st
+
+
+def make_state(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
+               n_threads: int = None) -> Dict:
+    return jax.tree_util.tree_map(
+        jnp.asarray, make_state_np(cfg, binary, wram_init, mram_init,
+                                   n_threads))
 
 
 # ---------------------------------------------------------------------------
@@ -516,10 +548,25 @@ def _classify_and_advance(cfg, st, cycle, running, issued_any, n_ready0):
     return new
 
 
-def make_step(cfg: DPUConfig, binary: isa.Binary):
-    ir = tuple(jnp.asarray(x) for x in binary.arrays)
+def make_cond(cfg: DPUConfig):
+    """Termination predicate shared by every backend's while-loop driver."""
 
-    def step(st):
+    def cond(st):
+        alive = (st["status"] != DONE).any(-1)
+        return (alive & (st["cycle"] < cfg.max_cycles)).any()
+
+    return cond
+
+
+def make_step_traced(cfg: DPUConfig):
+    """One simulated cycle as a pure function ``(ir, state) -> state``.
+
+    ``ir`` is the instruction image (the 6 SoA int32 vectors of
+    :class:`isa.Binary`) passed as *traced operands*: the compiled XLA
+    executable is binary-agnostic, so every kernel of the same padded
+    program shape reuses it (see :mod:`repro.core.compile_cache`)."""
+
+    def step(ir, st):
         cycle = st["cycle"]
         alive = (st["status"] != DONE).any(-1)
         running = alive & (cycle < cfg.max_cycles)
@@ -555,22 +602,24 @@ def make_step(cfg: DPUConfig, binary: isa.Binary):
                                    n_ready0)
         return st
 
-    def cond(st):
-        alive = (st["status"] != DONE).any(-1)
-        return (alive & (st["cycle"] < cfg.max_cycles)).any()
+    return step
 
-    return step, cond
+
+def make_step(cfg: DPUConfig, binary: isa.Binary):
+    """Back-compat closure form: the instruction image is baked into the
+    step as XLA constants.  Prefer :func:`run` (which goes through the
+    compiled-engine cache) or :func:`make_step_traced`."""
+    ir = tuple(jnp.asarray(x) for x in binary.arrays)
+    step = make_step_traced(cfg)
+    return functools.partial(step, ir), make_cond(cfg)
 
 
 def run(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
         n_threads: int = None):
-    """Simulate to completion; returns the final state (host numpy pytree)."""
-    step, cond = make_step(cfg, binary)
-    st0 = make_state(cfg, binary, wram_init, mram_init, n_threads)
+    """Simulate to completion; returns the final state (host numpy pytree).
 
-    @jax.jit
-    def go(st):
-        return jax.lax.while_loop(cond, step, st)
-
-    out = go(st0)
-    return jax.tree_util.tree_map(np.asarray, out)
+    Launches through :mod:`repro.core.compile_cache`: warm relaunches of
+    any kernel with the same padded shape reuse one XLA executable."""
+    from repro.core import compile_cache
+    return compile_cache.run(cfg, binary, wram_init, mram_init,
+                             n_threads=n_threads, backend="scalar")

@@ -224,6 +224,21 @@ class PIMSystem:
             {f"rank{r}": seconds for r in self._ranks_or_all(ranks)})
 
     # ---- kernel launch ---------------------------------------------------------
+    def prewarm(self, binary: Binary, n_threads: Optional[int] = None,
+                mram_words: Optional[int] = None,
+                dpus: Optional[Sequence[int]] = None):
+        """Compile the engine executable a later :meth:`launch` will use
+        (cold XLA compile off the measured path).  With ``dpus`` the
+        subset's DPU bucket is warmed instead — any other subset size in
+        the same power-of-two bucket shares the executable.  Returns the
+        compile-cache key."""
+        from repro.core import compile_cache
+        cfg = self.cfg
+        if dpus is not None:
+            cfg = cfg.replace(n_dpus=len({int(d) for d in dpus}))
+        return compile_cache.prewarm(cfg, binary, mram_words=mram_words,
+                                     n_threads=n_threads)
+
     def launch(self, name: str, binary: Binary, args: np.ndarray,
                mram: np.ndarray, n_threads: Optional[int] = None,
                wram_extra: Optional[np.ndarray] = None,
@@ -241,7 +256,12 @@ class PIMSystem:
         out in **ascending DPU order** (row i of the returned state is
         the i-th smallest DPU id, regardless of the order passed), and
         the engine renumbers it 0..len(dpus)-1 (a kernel's
-        ``DPU_ID``/``N_DPUS`` registers see the subset)."""
+        ``DPU_ID``/``N_DPUS`` registers see the subset).
+
+        Every launch goes through ``repro.core.compile_cache``: the DPU
+        axis is padded to a power-of-two bucket, so subsets of any size
+        within one bucket (and relaunches of any same-shaped kernel)
+        reuse a warm XLA executable instead of recompiling."""
         cfg = self.cfg
         D = cfg.n_dpus
         T = n_threads or cfg.n_tasklets

@@ -12,6 +12,8 @@ lanes touch different rows.  MRAM streaming bandwidth is shared either way
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,14 +24,21 @@ from repro.core.engine import BLK_BAR, BLK_DMA, DONE, INF, RUN, alu_exec
 from repro.core.isa import Op
 
 
-def make_state(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None):
-    st = engine.make_state(cfg, binary, wram_init, mram_init, n_threads)
+def make_state_np(cfg: DPUConfig, binary, wram_init, mram_init,
+                  n_threads=None):
+    st = engine.make_state_np(cfg, binary, wram_init, mram_init, n_threads)
     D = cfg.n_dpus
     T = st["status"].shape[1]
     n_warps = T // cfg.simt_width
-    st["warp_next"] = jnp.zeros((D, n_warps), jnp.int32)
-    st["req_service"] = jnp.zeros((D, T), jnp.int32)
+    st["warp_next"] = np.zeros((D, n_warps), np.int32)
+    st["req_service"] = np.zeros((D, T), np.int32)
     return st
+
+
+def make_state(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None):
+    return jax.tree_util.tree_map(
+        jnp.asarray, make_state_np(cfg, binary, wram_init, mram_init,
+                                   n_threads))
 
 
 def _dram_step(cfg: DPUConfig, st, cycle):
@@ -71,12 +80,13 @@ def _dram_step(cfg: DPUConfig, st, cycle):
     return new
 
 
-def make_step(cfg: DPUConfig, binary):
-    ir = tuple(jnp.asarray(x) for x in binary.arrays)
-    iop, ird, ira, irb, iimm, iui = ir
+def make_step_traced(cfg: DPUConfig):
+    """One SIMT cycle as a pure function ``(ir, state) -> state`` with the
+    instruction image as traced operands (see ``engine.make_step_traced``)."""
     W = cfg.simt_width
 
-    def step(st):
+    def step(ir, st):
+        iop, ird, ira, irb, iimm, iui = ir
         cycle = st["cycle"]
         D, T = st["status"].shape
         nW = T // W
@@ -292,22 +302,19 @@ def make_step(cfg: DPUConfig, binary):
         )
         return st
 
-    def cond(st):
-        alive = (st["status"] != DONE).any(-1)
-        return (alive & (st["cycle"] < cfg.max_cycles)).any()
+    return step
 
-    return step, cond
+
+def make_step(cfg: DPUConfig, binary):
+    """Back-compat closure form (instruction image baked as constants)."""
+    ir = tuple(jnp.asarray(x) for x in binary.arrays)
+    return functools.partial(make_step_traced(cfg), ir), engine.make_cond(cfg)
 
 
 def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None):
     assert cfg.simt_width > 0
     T = n_threads or cfg.n_tasklets
     assert T % cfg.simt_width == 0, "n_tasklets must be a multiple of warp width"
-    step, cond = make_step(cfg, binary)
-    st0 = make_state(cfg, binary, wram_init, mram_init, T)
-
-    @jax.jit
-    def go(st):
-        return jax.lax.while_loop(cond, step, st)
-
-    return jax.tree_util.tree_map(np.asarray, go(st0))
+    from repro.core import compile_cache
+    return compile_cache.run(cfg, binary, wram_init, mram_init, n_threads=T,
+                             backend="simt")

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.engine import select_tree
+
 TILE = (8, 128)
 
 
@@ -36,10 +38,13 @@ def _alu_kernel(op_ref, a_ref, b_ref, o_ref):
         (a < b).astype(jnp.int32),
         (au < bu).astype(jnp.int32),
     ]
-    out = jnp.zeros_like(a)
-    for i, r in enumerate(results):
-        out = jnp.where(op == i, r, out)
-    o_ref[...] = out
+    # balanced select tree (mirrors engine.alu_exec): log2(12) select
+    # depth on the VPU instead of a 12-long dependent where chain.
+    # Unlike the engine (whose caller masks on op <= SLTU), this kernel
+    # has no downstream mask, so keep the oracle's 0-for-non-ALU-opcode
+    # contract explicitly (the decode stream carries ops up to SPC=30).
+    out = select_tree(op, results)
+    o_ref[...] = jnp.where((op >= 0) & (op < len(results)), out, 0)
 
 
 def alu_exec_2d(op, a, b, *, interpret=True):

@@ -24,8 +24,13 @@ def _extend_dense_cache(cache, extra):
     return {k: pad(v) for k, v in cache.items()}
 
 
-@pytest.mark.parametrize("arch", ["recurrentgemma-9b", "mamba2-130m",
-                                  "deepseek-v3-671b", "granite-3-8b"])
+# mamba2 (SSM) and granite (dense) stay in the default run; the
+# heavier hybrid-window and MoE continuations are opt-in via -m slow
+@pytest.mark.parametrize("arch", [
+    pytest.param("recurrentgemma-9b", marks=pytest.mark.slow),
+    "mamba2-130m",
+    pytest.param("deepseek-v3-671b", marks=pytest.mark.slow),
+    "granite-3-8b"])
 def test_decode_continuation_matches(arch):
     cfg = get_smoke_config(arch).replace(dtype="float32")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -46,6 +51,8 @@ def test_decode_continuation_matches(arch):
                                rtol=3e-3, atol=3e-3)
 
 
+@pytest.mark.slow  # 16-step decode past 3x window; the default run keeps
+# hybrid coverage via test_decode_continuation_matches fast params
 def test_hybrid_window_ring_wraps():
     """Decode far past the window: ring slots wrap and old tokens fall out
     of scope — logits must match a fresh prefill of the suffix context."""

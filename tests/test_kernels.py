@@ -50,6 +50,17 @@ def test_alu_edge_cases():
     assert (alu_exec(op, a, b) == alu_exec_ref(op, a, b)).all()
 
 
+def test_alu_nonalu_opcodes_return_zero():
+    """Decode streams carry non-ALU opcodes (LW=12..SPC=30); the kernel
+    must keep the oracle's 0-for-those contract (no downstream mask)."""
+    op = jnp.asarray([12, 16, 28, 30, -1], jnp.int32)
+    a = jnp.asarray([5, 6, 7, 8, 9], jnp.int32)
+    b = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    got = alu_exec(op, a, b)
+    assert (got == alu_exec_ref(op, a, b)).all()
+    assert (got == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -376,6 +376,7 @@ def _wl_cfg(**kw):
                 mram_bytes=1 << 21, **kw)
 
 
+@pytest.mark.slow  # fast-path pipelined coverage: test_pipelined_bfs_oracle
 def test_pipelined_hst_oracle_and_overlap():
     # Workload.run's pipelined mode; HST's readback collective rides along
     ser = _sys(mode="inorder", **_wl_cfg())

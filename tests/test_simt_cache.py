@@ -34,7 +34,14 @@ def test_simt_divergence_correct():
     wl.get("SEL").run(PIMSystem(simt), 16, scale=0.03)  # raises on mismatch
 
 
-@pytest.mark.parametrize("name", wl.CACHEABLE)
+# BS/RED stay in the default (fast) run as the cache-mode
+# representatives; the heavier sweeps are opt-in via -m slow
+_SLOW_CACHEABLE = {"GEMV", "UNI", "SEL", "VA"}
+
+
+@pytest.mark.parametrize("name", [
+    pytest.param(n, marks=pytest.mark.slow) if n in _SLOW_CACHEABLE else n
+    for n in wl.CACHEABLE])
 def test_cache_mode_correct(name):
     cfg = DPUConfig(n_dpus=1, n_tasklets=8, mram_bytes=1 << 20,
                     cache_mode=True, wram_bytes=1 << 22)
@@ -43,6 +50,7 @@ def test_cache_mode_correct(name):
     assert rep.dc_hit + rep.dc_miss > 0
 
 
+@pytest.mark.slow  # fast-path cache-mode coverage: test_cache_mode_correct[BS]
 def test_cache_beats_scratchpad_for_bs():
     """Paper Fig. 15/16: on-demand caching wins when static staging
     overfetches (binary search)."""
@@ -67,6 +75,8 @@ def test_mmu_overhead_small():
     assert r1.tlb_hit > 0
 
 
+@pytest.mark.slow  # fast-path ILP coverage: test_engine's forwarding /
+# RF-hazard / superscalar microbenchmarks
 def test_ilp_features_additive():
     base = DPUConfig(n_dpus=1, n_tasklets=16, mram_bytes=1 << 21)
     times = {}

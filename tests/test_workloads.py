@@ -7,7 +7,10 @@ from repro.core.config import DPUConfig
 from repro.core.host import PIMSystem
 
 FAST = ["VA", "RED", "SCAN-SSA", "SCAN-RSS", "SEL", "UNI", "HST-S", "HST-L",
-        "BS", "TS", "GEMV", "TRNS", "SpMV", "MLP"]
+        "BS", "TS", "GEMV", "TRNS", "SpMV",
+        # MLP simulates a multi-layer GEMV chain — by far the longest
+        # single-kernel run; opt-in via -m slow (fast MLP smoke below)
+        pytest.param("MLP", marks=pytest.mark.slow)]
 MULTIK = ["BFS", "NW"]
 
 
@@ -20,6 +23,14 @@ def test_workload_correct_8t(name):
     # cycle accounting closes (per-DPU finish times may differ slightly)
     tot = rep.active_cycles + rep.idle_mem + rep.idle_rev + rep.idle_rf
     assert tot == int(np.asarray(st["cycle"]).sum())
+
+
+def test_mlp_fast_smoke():
+    """Tiny-scale MLP so the default run keeps linalg-chain coverage
+    (the full-scale sweep is test_workload_correct_8t[MLP], -m slow)."""
+    cfg = DPUConfig(n_dpus=1, n_tasklets=8, mram_bytes=1 << 21)
+    _, rep = wl.get("MLP").run(PIMSystem(cfg), n_threads=8, scale=0.01)
+    assert rep.cycles > 0  # oracle inside run() raises on any mismatch
 
 
 @pytest.mark.parametrize("name", ["VA", "RED", "BS"])
