@@ -4,8 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per figure/design point).
 ``--scale`` grows datasets toward the paper's Table II sizes; default runs
 the suite at CI scale in a few minutes.  ``--suite`` selects a family
 (``figs`` paper figures, ``comm`` interconnect/collectives, ``overlap``
-async-pipeline, ``lm`` serving roofline, ``all``); ``--only`` further
-filters by substring.
+async-pipeline, ``lm`` serving roofline, ``faults`` fault-injection
+availability/goodput, ``all``); ``--only`` further filters by substring.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 0.05] \\
         [--suite comm] [--only fig11]
@@ -17,7 +17,7 @@ import json
 import time
 
 #: suite families selectable via --suite (benches declare theirs inline)
-SUITE_NAMES = ("figs", "comm", "overlap", "lm")
+SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults")
 
 
 def _emit(name: str, wall_s: float, rows):
@@ -34,8 +34,8 @@ def main() -> None:
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
     args = ap.parse_args()
 
-    from benchmarks import comm_scaling, lm_roofline, overlap_scaling, \
-        pim_figs, rank_overlap
+    from benchmarks import comm_scaling, fault_tolerance, lm_roofline, \
+        overlap_scaling, pim_figs, rank_overlap
 
     char = None
 
@@ -66,6 +66,9 @@ def main() -> None:
         "mmu_overhead": ("figs", lambda: pim_figs.mmu_overhead(args.scale)),
         "simulation_rate": ("figs", lambda: pim_figs.simulation_rate(args.scale)),
         "lm_roofline": ("lm", lambda: lm_roofline.table(args.dryrun_dir)),
+        "fault_smoke": ("faults", lambda: [fault_tolerance.smoke()]),
+        "fault_tolerance": ("faults", lambda: fault_tolerance.sweep(
+            args.scale, rates=[0.0, 0.02, 0.05], trials=2, launches=4)),
     }
     bad = {k for k, (s, _) in benches.items() if s not in SUITE_NAMES}
     assert not bad, f"benches with unknown suite: {bad}"

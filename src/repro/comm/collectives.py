@@ -37,6 +37,17 @@ def _charge(system, kind: str, seconds: float, nbytes: float, ranks=None):
     system.collective(kind, seconds, nbytes, ranks=ranks)
 
 
+def _check_root_alive(system, root: int, kind: str):
+    # a rooted collective through a faulted root would silently source or
+    # sink garbage; surface it as a typed fault instead
+    mask = getattr(system, "active_mask", None)
+    if mask is not None and 0 <= root < len(mask) and not mask[root]:
+        from repro.faults.model import DpuFaultError, FaultReport
+        raise DpuFaultError(FaultReport(
+            kind="dead_root", label=kind, dpus=(int(root),),
+            detail=f"{kind} rooted at faulted DPU {root}"))
+
+
 def _check_region(mram, off: int, n: int):
     # numpy slicing would silently truncate; fail loudly instead so a
     # miscomputed offset can't move less data than the charged time claims
@@ -99,6 +110,7 @@ def _commit(mram, idx, view):
 def broadcast(system, mram: np.ndarray, off: int, n: int, root: int = 0,
               dpus: Optional[Sequence[int]] = None):
     """Replicate ``n`` words at ``off`` from DPU ``root`` to all DPUs."""
+    _check_root_alive(system, root, "broadcast")
     idx = _normalize(mram, dpus)
     view, fab, ranks, (r,) = _view(system, mram, idx, off + n, root)
     _check_region(view, off, n)
@@ -115,6 +127,7 @@ def scatter(system, mram: np.ndarray, src_off: int, dst_off: int,
             dpus: Optional[Sequence[int]] = None):
     """Split ``D * n_per_dpu`` words at ``src_off`` on ``root`` into
     per-DPU shards of ``n_per_dpu`` words at ``dst_off``."""
+    _check_root_alive(system, root, "scatter")
     idx = _normalize(mram, dpus)
     D = mram.shape[0] if idx is None else len(idx)
     view, fab, ranks, (r,) = _view(
@@ -138,6 +151,7 @@ def gather(system, mram: np.ndarray, src_off: int, dst_off: int,
            dpus: Optional[Sequence[int]] = None):
     """Concatenate each DPU's ``n_per_dpu``-word shard at ``src_off``
     into ``D * n_per_dpu`` words at ``dst_off`` on ``root``."""
+    _check_root_alive(system, root, "gather")
     idx = _normalize(mram, dpus)
     D = mram.shape[0] if idx is None else len(idx)
     view, fab, ranks, (r,) = _view(
@@ -157,6 +171,7 @@ def gather(system, mram: np.ndarray, src_off: int, dst_off: int,
 def reduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
            root: int = 0, dpus: Optional[Sequence[int]] = None):
     """Combine ``n`` words at ``off`` across DPUs onto ``root``."""
+    _check_root_alive(system, root, "reduce")
     idx = _normalize(mram, dpus)
     view, fab, ranks, (r,) = _view(system, mram, idx, off + n, root)
     _check_region(view, off, n)

@@ -122,8 +122,14 @@ def _get_entry(cfg: DPUConfig, backend: str, P: int, Dp: int, T: int,
 
 
 def _padded_state(cfg: DPUConfig, backend: str, binary, wram_init, mram_init,
-                  T: int, Dp: int, all_done: bool = False):
-    """Initial state padded to the DPU bucket, masked lanes DONE."""
+                  T: int, Dp: int, all_done: bool = False,
+                  ndpus_reg: int = None):
+    """Initial state padded to the DPU bucket, masked lanes DONE.
+
+    ``ndpus_reg`` overrides the ``N_DPUS`` register the kernels read —
+    runtime state, not part of any cache key.  The fault runtime uses it
+    so a degraded subset launch (survivors of a logically ``n``-wide
+    system) still sees the logical width."""
     mod = simt if backend == "simt" else engine
     D = cfg.n_dpus
     if Dp != D:
@@ -136,13 +142,16 @@ def _padded_state(cfg: DPUConfig, backend: str, binary, wram_init, mram_init,
     if Dp != D:
         st["status"][D:] = engine.DONE          # masked lanes never issue
         st["regs"][:, :, isa.R_NDPU] = D        # kernels see the logical size
+    if ndpus_reg is not None:
+        st["regs"][:D, :, isa.R_NDPU] = int(ndpus_reg)
     if all_done:
         st["status"][:] = engine.DONE
     return jax.tree_util.tree_map(jnp.asarray, st)
 
 
 def _launch(cfg: DPUConfig, binary, wram_init, mram_init, T: int,
-            backend: str, pad: bool, all_done: bool = False):
+            backend: str, pad: bool, all_done: bool = False,
+            ndpus_reg: int = None):
     if backend == "simt":
         assert cfg.simt_width > 0, "simt backend needs simt_width > 0"
         assert T % cfg.simt_width == 0, \
@@ -153,7 +162,7 @@ def _launch(cfg: DPUConfig, binary, wram_init, mram_init, T: int,
     P = program_bucket(binary.n_instrs, capacity) if pad else capacity
     Dp = dpu_bucket(cfg.n_dpus) if pad else cfg.n_dpus
     st0 = _padded_state(cfg, backend, binary, wram_init, mram_init, T, Dp,
-                        all_done=all_done)
+                        all_done=all_done, ndpus_reg=ndpus_reg)
     entry = _get_entry(cfg, backend, P, Dp, T, mram_init.shape[1])
     ir = tuple(jnp.asarray(a[:P]) for a in binary.arrays)
     out = entry.go(ir, st0)
@@ -162,7 +171,8 @@ def _launch(cfg: DPUConfig, binary, wram_init, mram_init, T: int,
 
 
 def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads: int = None,
-        backend: str = None, pad: bool = True) -> Dict[str, np.ndarray]:
+        backend: str = None, pad: bool = True,
+        ndpus_reg: int = None) -> Dict[str, np.ndarray]:
     """Simulate ``binary`` to completion through the compiled-engine cache.
 
     The launch path behind ``engine.run`` and ``simt.run``:
@@ -170,14 +180,19 @@ def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads: int = None,
     * ``backend`` — ``"scalar"`` | ``"simt"`` (default: by
       ``cfg.simt_width``);
     * ``pad=False`` disables shape bucketing (exact shapes; used by the
-      bit-exactness tests as the unpadded reference).
+      bit-exactness tests as the unpadded reference);
+    * ``ndpus_reg`` overrides the ``N_DPUS`` register (degraded remap
+      launches keep the pre-fault logical width) — it changes initial
+      state only, never the cache key, so degraded launches stay
+      warm-cache.
 
     Returns the final state as a host-numpy pytree sliced back to the
     logical ``cfg.n_dpus`` rows."""
     if backend is None:
         backend = "simt" if cfg.simt_width > 0 else "scalar"
     T = n_threads or cfg.n_tasklets
-    _, out = _launch(cfg, binary, wram_init, mram_init, T, backend, pad)
+    _, out = _launch(cfg, binary, wram_init, mram_init, T, backend, pad,
+                     ndpus_reg=ndpus_reg)
     out = jax.tree_util.tree_map(np.asarray, out)
     if out["status"].shape[0] != cfg.n_dpus:
         out = jax.tree_util.tree_map(lambda x: x[:cfg.n_dpus], out)

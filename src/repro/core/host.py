@@ -32,10 +32,12 @@ from repro.core import engine, simt, stats
 from repro.core.asm import ARG_BYTES, CACHE_DATA_BASE, Program
 from repro.core.config import DPUConfig
 from repro.core.isa import Binary
+from repro.faults.model import DpuFaultError, FaultPlan, FaultReport
+from repro.faults.retry import DEFAULT_POLICY, RetryPolicy
 from repro.sched import queue as sq
 from repro.sched import scheduler as ssched
 
-PHASES = ("h2d", "kernel", "d2h", "inter_dpu")
+PHASES = ("h2d", "kernel", "d2h", "inter_dpu", "retry")
 
 
 @dataclass
@@ -51,6 +53,7 @@ class Timeline:
     kernel: float = 0.0
     d2h: float = 0.0
     inter_dpu: float = 0.0  # inter-DPU exchanges between kernels
+    retry: float = 0.0      # wasted attempts + backoff (fault recovery)
     #: per-event attribution: (phase, label, seconds, bytes)
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
     #: overlapped makespan from the repro.sched scheduler (None = not synced)
@@ -65,7 +68,13 @@ class Timeline:
 
     @property
     def total(self) -> float:
-        return self.h2d + self.kernel + self.d2h + self.inter_dpu
+        return self.h2d + self.kernel + self.d2h + self.inter_dpu + self.retry
+
+    @property
+    def goodput(self) -> float:
+        """Useful fraction of the serialized busy time: 1 − retry/total
+        (1.0 when nothing was wasted, or nothing ran)."""
+        return 1.0 if self.total <= 0.0 else 1.0 - self.retry / self.total
 
     @property
     def end_to_end(self) -> float:
@@ -81,7 +90,8 @@ class Timeline:
     def breakdown(self) -> Dict[str, float]:
         t = max(self.total, 1e-30)
         return {"kernel": self.kernel / t, "h2d": self.h2d / t,
-                "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t}
+                "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t,
+                "retry": self.retry / t}
 
     def by_label(self, phase: str) -> Dict[str, float]:
         """Seconds per event label within one phase (e.g. per-collective)."""
@@ -93,10 +103,25 @@ class Timeline:
 
 
 class PIMSystem:
-    """Channels x ranks x DPUs + the host runtime."""
+    """Channels x ranks x DPUs + the host runtime.
+
+    ``faults`` installs a :class:`~repro.faults.model.FaultPlan`; without
+    one every fault-handling branch is skipped and timelines/results are
+    bit-exact with pre-fault builds (pay-for-what-you-use).  ``retry``
+    sets the :class:`~repro.faults.retry.RetryPolicy` for transient
+    kernel faults and link timeouts (default: 3 attempts, exponential
+    backoff).  ``recovery`` is the launch-failure policy workloads
+    consult: ``"remap"`` re-executes lost shards on survivors,
+    ``"raise"`` is fail-stop.  ``ckpt_dir`` enables checkpointed
+    re-execution (``repro.ckpt.store``) of remapped shards."""
 
     def __init__(self, cfg: DPUConfig, fabric: Optional[Fabric] = None,
-                 mode: str = "inorder"):
+                 mode: str = "inorder", faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 recovery: str = "remap", ckpt_dir: Optional[str] = None):
+        if recovery not in ("remap", "raise"):
+            raise ValueError(f"unknown recovery policy {recovery!r} "
+                             "(want remap|raise)")
         self.cfg = cfg
         self.topology = RankTopology.from_config(cfg)
         self.fabric = fabric or make_fabric(cfg, self.topology)
@@ -104,17 +129,68 @@ class PIMSystem:
         self.reports = []
         self.runtime = sq.QueueRuntime(mode)
         self.last_schedule: Optional[ssched.Schedule] = None
+        # ---- fault state (inert when faults is None) ----
+        self.faults = faults
+        self.retry = retry or (DEFAULT_POLICY if faults is not None else None)
+        self.recovery = recovery
+        self.ckpt_dir = ckpt_dir
+        self.active_mask = np.ones(cfg.n_dpus, bool)
+        self.fault_log: List[FaultReport] = []
+        self.last_launch_faults: Optional[Dict] = None
+        self._launch_idx = 0     # kernel launches seen (FaultPlan key)
+        self._xfer_idx = 0       # host transfers seen (FaultPlan key)
+
+    # ---- fault state ---------------------------------------------------------
+    @property
+    def active_dpus(self) -> List[int]:
+        """Sorted ids of currently healthy DPUs."""
+        return [int(d) for d in np.flatnonzero(self.active_mask)]
+
+    def disable_dpus(self, dpus: Sequence[int], label: str = "manual"):
+        """Administratively mark DPUs dead (fused-off lanes, tests)."""
+        dead = sorted({int(d) for d in dpus})
+        self.topology.ranks_of(dead)  # validates the range
+        self.active_mask[dead] = False
+        self.fault_log.append(FaultReport(
+            kind="permanent", label=label, dpus=tuple(dead),
+            detail="disabled by host"))
+
+    def _advance_permanents(self, label: str, launch_idx: int) -> np.ndarray:
+        """Sample permanent deaths at this launch; returns the bool mask
+        of lanes that died *now* (previously-dead lanes excluded)."""
+        dies = self.faults.permanent_faults(launch_idx, self.cfg.n_dpus)
+        newly = dies & self.active_mask
+        if newly.any():
+            self.active_mask &= ~dies
+            self.fault_log.append(FaultReport(
+                kind="permanent", label=label, launch=launch_idx,
+                dpus=tuple(int(d) for d in np.flatnonzero(newly))))
+        return newly
 
     # ---- command-queue plumbing ---------------------------------------------
     def _submit(self, kind: str, phase: str, label: str, seconds: float,
-                nbytes: float, resources: Dict[str, float]) -> "sq.Command":
+                nbytes: float, resources: Dict[str, float],
+                attempt: int = 0) -> "sq.Command":
         """Charge the timeline (eager, serialized-order sums) and queue the
         command for the overlapped schedule."""
         self._invalidate_schedule()
         self.timeline.add(phase, seconds, label, nbytes)
         return self.runtime.submit(kind, label or phase, seconds,
                                    phase=phase, nbytes=nbytes,
-                                   resources=resources)
+                                   resources=resources, attempt=attempt)
+
+    def _charge_retry(self, kind: str, label: str, seconds: float,
+                      resources: Dict[str, float], attempt: int,
+                      nbytes: float = 0.0) -> "sq.Command":
+        """Queue a fully-wasted command (failed attempt or backoff hold)
+        on the current stream: it occupies real time and resources but
+        lands in the timeline's ``retry`` phase and counts against
+        goodput."""
+        self._invalidate_schedule()
+        self.timeline.add("retry", seconds, label, nbytes)
+        return self.runtime.submit(kind, label, seconds, phase="retry",
+                                   nbytes=nbytes, resources=resources,
+                                   wasted=seconds, attempt=attempt)
 
     def _invalidate_schedule(self):
         # a schedule resolved by sync() no longer covers newly submitted
@@ -185,14 +261,58 @@ class PIMSystem:
     def h2d(self, bytes_per_dpu, label: str = "h2d") -> "sq.Command":
         """Host write; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "h2d")
-        return self._submit(sq.H2D, "h2d", label, ev.seconds, ev.total_bytes,
-                            self._chan_resources(ev))
+        return self._transfer(sq.H2D, "h2d", label, ev)
 
     def d2h(self, bytes_per_dpu, label: str = "d2h") -> "sq.Command":
         """Host read; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "d2h")
-        return self._submit(sq.D2H, "d2h", label, ev.seconds, ev.total_bytes,
-                            self._chan_resources(ev))
+        return self._transfer(sq.D2H, "d2h", label, ev)
+
+    def _transfer(self, kind: str, phase: str, label: str,
+                  ev: TransferEvent) -> "sq.Command":
+        """Submit one host transfer, retrying link timeouts and pricing
+        link degradation when a fault plan is installed."""
+        res = self._chan_resources(ev)
+        if self.faults is None:
+            return self._submit(kind, phase, label, ev.seconds,
+                                ev.total_bytes, res)
+        xfer = self._xfer_idx
+        self._xfer_idx += 1
+        policy = self.retry or DEFAULT_POLICY
+        for attempt in range(policy.max_attempts):
+            out = self.faults.link_outcome(xfer, attempt)
+            secs = ev.seconds * out.factor
+            timed_out = out.timeout or (policy.timeout_seconds is not None
+                                        and secs > policy.timeout_seconds)
+            if not timed_out:
+                if out.factor > 1.0:
+                    self.fault_log.append(FaultReport(
+                        kind="link", label=label, launch=xfer,
+                        attempt=attempt,
+                        detail=f"degraded x{out.factor:g}"))
+                scaled = {r: b * out.factor for r, b in res.items()}
+                return self._submit(kind, phase, label, secs,
+                                    ev.total_bytes, scaled, attempt=attempt)
+            # hung attempt: the host notices at the timeout (or, with no
+            # timeout configured, after the full degraded duration)
+            waste = secs if policy.timeout_seconds is None \
+                else min(secs, policy.timeout_seconds)
+            self.fault_log.append(FaultReport(
+                kind="link", label=label, launch=xfer, attempt=attempt,
+                detail="timeout", wasted_seconds=waste))
+            self._charge_retry(kind, label,
+                               waste, {r: min(b * out.factor, waste)
+                                       for r, b in res.items()},
+                               attempt, nbytes=ev.total_bytes)
+            backoff = policy.backoff_after(attempt)
+            if backoff > 0.0:
+                self._charge_retry(kind, f"{label}:backoff", backoff, {},
+                                   attempt)
+        raise DpuFaultError(FaultReport(
+            kind="retry_exhausted", label=label, launch=xfer,
+            attempt=policy.max_attempts,
+            detail=f"transfer timed out on all {policy.max_attempts} "
+                   "attempts"))
 
     def collective(self, kind: str, seconds: float, nbytes: float,
                    ranks: Optional[Sequence[int]] = None) -> "sq.Command":
@@ -212,16 +332,65 @@ class PIMSystem:
         self.collective("bounce", self.fabric.bounce(bytes_per_dpu),
                         bytes_per_dpu)
 
+    def _charge_kernel(self, name: str, seconds: float,
+                       ranks: Optional[Sequence[int]] = None
+                       ) -> "sq.Command":
+        """Charge one successful kernel: hold the involved ranks' compute
+        slots (no fault handling — the caller already resolved that)."""
+        return self._submit(
+            sq.LAUNCH, "kernel", name, seconds, 0.0,
+            {f"rank{r}": seconds for r in self._ranks_or_all(ranks)})
+
     def modeled_launch(self, name: str, seconds: float,
                        ranks: Optional[Sequence[int]] = None
                        ) -> "sq.Command":
         """Charge a kernel of known duration without running the engine —
         for what-if schedule studies and tests.  Holds the compute slots
         of ``ranks`` (default: every rank), exactly like a real
-        :meth:`launch` of the corresponding DPU subset."""
-        return self._submit(
-            sq.LAUNCH, "kernel", name, seconds, 0.0,
-            {f"rank{r}": seconds for r in self._ranks_or_all(ranks)})
+        :meth:`launch` of the corresponding DPU subset.
+
+        With a fault plan installed the modeled kernel participates in
+        the fault stream: permanent deaths advance at each launch, a
+        launch whose ranks hold no live DPU raises
+        :class:`DpuFaultError`, and transient faults are retried under
+        the system's policy with the wasted attempts priced into the
+        ``retry`` phase."""
+        if self.faults is None:
+            return self._charge_kernel(name, seconds, ranks)
+        launch_idx = self._launch_idx
+        self._launch_idx += 1
+        self._advance_permanents(name, launch_idx)
+        rlist = list(self._ranks_or_all(ranks))
+        lanes = [d for r in rlist
+                 for d in range(*self.topology.dpu_slice(r).indices(
+                     self.cfg.n_dpus))]
+        alive = [d for d in lanes if self.active_mask[d]]
+        if not alive:
+            raise DpuFaultError(FaultReport(
+                kind="no_active_dpus", label=name, launch=launch_idx,
+                dpus=tuple(lanes), detail="no live DPU on the launch ranks"))
+        policy = self.retry or DEFAULT_POLICY
+        rank_res = {f"rank{r}": seconds for r in rlist}
+        for attempt in range(policy.max_attempts):
+            t_mask = self.faults.transient_faults(launch_idx, attempt,
+                                                  self.cfg.n_dpus)
+            faulted = [d for d in alive if t_mask[d]]
+            if not faulted:
+                return self._submit(sq.LAUNCH, "kernel", name, seconds, 0.0,
+                                    rank_res, attempt=attempt)
+            self.fault_log.append(FaultReport(
+                kind="transient", label=name, launch=launch_idx,
+                attempt=attempt, dpus=tuple(faulted),
+                wasted_seconds=seconds))
+            self._charge_retry(sq.LAUNCH, name, seconds, rank_res, attempt)
+            backoff = policy.backoff_after(attempt)
+            if backoff > 0.0:
+                self._charge_retry(sq.LAUNCH, f"{name}:backoff", backoff,
+                                   {}, attempt)
+        raise DpuFaultError(FaultReport(
+            kind="retry_exhausted", label=name, launch=launch_idx,
+            attempt=policy.max_attempts,
+            detail=f"kernel faulted on all {policy.max_attempts} attempts"))
 
     # ---- kernel launch ---------------------------------------------------------
     def prewarm(self, binary: Binary, n_threads: Optional[int] = None,
@@ -242,7 +411,8 @@ class PIMSystem:
     def launch(self, name: str, binary: Binary, args: np.ndarray,
                mram: np.ndarray, n_threads: Optional[int] = None,
                wram_extra: Optional[np.ndarray] = None,
-               dpus: Optional[Sequence[int]] = None):
+               dpus: Optional[Sequence[int]] = None,
+               degraded: bool = False, ndpus_reg: Optional[int] = None):
         """Run one kernel on all DPUs (or on the ``dpus`` subset).
 
         args: (D, n_args) int32 scalars (host-written WRAM arg area).
@@ -257,21 +427,53 @@ class PIMSystem:
         the i-th smallest DPU id, regardless of the order passed), and
         the engine renumbers it 0..len(dpus)-1 (a kernel's
         ``DPU_ID``/``N_DPUS`` registers see the subset).
+        ``ndpus_reg`` overrides what the ``N_DPUS`` register reports —
+        remapped recovery launches keep the pre-fault logical width.
+
+        Under a fault plan, a launch that targets dead DPUs (or loses
+        lanes mid-kernel) raises :class:`DpuFaultError` unless
+        ``degraded=True``, in which case it runs on the survivors only
+        and the returned state carries the input image for dead rows
+        (``last_launch_faults`` says which) — the contract is structured
+        fault reports, never silently wrong data.
 
         Every launch goes through ``repro.core.compile_cache``: the DPU
         axis is padded to a power-of-two bucket, so subsets of any size
         within one bucket (and relaunches of any same-shaped kernel)
         reuse a warm XLA executable instead of recompiling."""
-        cfg = self.cfg
-        D = cfg.n_dpus
-        T = n_threads or cfg.n_tasklets
-        assert args.shape[0] == D and mram.shape[0] == D
-        ranks = None
+        D = self.cfg.n_dpus
+        T = n_threads or self.cfg.n_tasklets
+        if args.shape[0] != D or mram.shape[0] != D:
+            raise ValueError(
+                f"{name}: args/mram must carry one row per DPU "
+                f"(want {D}, got {args.shape[0]}/{mram.shape[0]}); subset "
+                "launches select rows via dpus=, not by passing fewer rows")
+        sel = None
         if dpus is not None:
             sel = sorted({int(d) for d in dpus})
             if not sel:
                 raise ValueError("dpus subset must not be empty")
-            ranks = self.topology.ranks_of(sel)  # validates the range
+            self.topology.ranks_of(sel)  # validates the range
+        if self.faults is None:
+            st, rep, ranks = self._launch_engine(
+                name, binary, args, mram, T, wram_extra, sel,
+                ndpus_reg=ndpus_reg)
+            self._charge_kernel(name, rep.kernel_seconds, ranks=ranks)
+            self.reports.append(rep)
+            return st, rep
+        return self._launch_faulty(name, binary, args, mram, T, wram_extra,
+                                   sel, degraded, ndpus_reg)
+
+    def _launch_engine(self, name: str, binary: Binary, args, mram, T: int,
+                       wram_extra, sel: Optional[List[int]],
+                       ndpus_reg: Optional[int] = None):
+        """Slice the (optional) subset, build the WRAM image, and run the
+        engine; returns (state, report, ranks) without charging time."""
+        cfg = self.cfg
+        D = cfg.n_dpus
+        ranks = None
+        if sel is not None:
+            ranks = self.topology.ranks_of(sel)
             args, mram = args[sel], mram[sel]
             if wram_extra is not None:
                 wram_extra = wram_extra[sel]
@@ -287,18 +489,144 @@ class PIMSystem:
             full[:, base:] = wram_extra
             wram = full
         if cfg.simt_width > 0:
-            st = simt.run(cfg, binary, wram, mram, n_threads=T)
+            st = simt.run(cfg, binary, wram, mram, n_threads=T,
+                          ndpus_reg=ndpus_reg)
         else:
-            st = engine.run(cfg, binary, wram, mram, n_threads=T)
+            st = engine.run(cfg, binary, wram, mram, n_threads=T,
+                            ndpus_reg=ndpus_reg)
         if (st["status"] != engine.DONE).any():
             raise RuntimeError(
                 f"{name}: kernel hit max_cycles={cfg.max_cycles} "
                 f"(status={np.unique(st['status'])})")
         rep = stats.report_from_state(name, cfg, st, T)
-        # the kernel holds the involved ranks' compute slots; transfers
-        # on the channel links (and other ranks) are free to overlap it
-        self.modeled_launch(name, rep.kernel_seconds, ranks=ranks)
+        return st, rep, ranks
+
+    def _launch_faulty(self, name: str, binary: Binary, args, mram, T: int,
+                       wram_extra, sel: Optional[List[int]], degraded: bool,
+                       ndpus_reg: Optional[int]):
+        """Fault-plan launch path: permanent deaths, bit flips + ECC,
+        transient retries — then one engine run on the survivors."""
+        cfg = self.cfg
+        launch_idx = self._launch_idx
+        self._launch_idx += 1
+        requested = sel if sel is not None else list(range(cfg.n_dpus))
+        dead_before = [d for d in requested if not self.active_mask[d]]
+        lost_mask = self._advance_permanents(name, launch_idx)
+        lost = [d for d in requested if lost_mask[d]]
+        if (dead_before or lost) and not degraded:
+            raise DpuFaultError(FaultReport(
+                kind="permanent", label=name, launch=launch_idx,
+                dpus=tuple(sorted(dead_before + lost)),
+                detail="launch targets faulted DPUs; retry with "
+                       "degraded=True (or remap) to run on survivors"))
+        alive = [d for d in requested if self.active_mask[d]]
+        if not alive:
+            raise DpuFaultError(FaultReport(
+                kind="no_active_dpus", label=name, launch=launch_idx,
+                dpus=tuple(requested),
+                detail="no surviving DPU in launch subset"))
+
+        # resolve the fault outcome of each attempt before paying for the
+        # engine: the winning attempt's (possibly silently corrupted)
+        # image is the one actually simulated
+        policy = self.retry or DEFAULT_POLICY
+        freq_hz = cfg.freq_mhz * 1e6
+        alive_set = set(alive)
+        success_attempt = None
+        wasted_attempts: List[Tuple[int, Tuple[int, ...]]] = []
+        ecc_seconds = 0.0
+        mram_run = mram
+        for attempt in range(policy.max_attempts):
+            flips = [f for f in self.faults.bitflips(
+                         launch_idx, attempt, cfg.n_dpus, mram.shape[1])
+                     if f[0] in alive_set]
+            outcomes = self.faults.ecc_outcomes(launch_idx, attempt,
+                                                len(flips))
+            att_ecc, detect_lanes, silent = 0.0, set(), []
+            for (d, w, b), oc in zip(flips, outcomes):
+                if oc == "correct":
+                    att_ecc += self.faults.ecc.correct_cycles / freq_hz
+                elif oc == "detect":
+                    att_ecc += self.faults.ecc.detect_cycles / freq_hz
+                    detect_lanes.add(d)
+                else:
+                    silent.append((d, w, b))
+                self.fault_log.append(FaultReport(
+                    kind="bitflip", label=name, launch=launch_idx,
+                    attempt=attempt, dpus=(d,),
+                    detail=f"word {w} bit {b}: "
+                           f"{oc if self.faults.ecc else 'no ECC'}"))
+            t_mask = self.faults.transient_faults(launch_idx, attempt,
+                                                  cfg.n_dpus)
+            faulted = sorted(detect_lanes | {d for d in alive if t_mask[d]})
+            if not faulted:
+                success_attempt = attempt
+                ecc_seconds = att_ecc
+                if silent:
+                    mram_run = np.array(mram)  # corrupt a copy, not input
+                    for d, w, b in silent:
+                        mram_run[d, w] ^= np.int32(1 << b) \
+                            if b < 31 else np.int32(-2147483648)
+                break
+            wasted_attempts.append((attempt, tuple(faulted)))
+            if attempt < policy.max_attempts - 1:
+                self.fault_log.append(FaultReport(
+                    kind="transient", label=name, launch=launch_idx,
+                    attempt=attempt, dpus=tuple(faulted)))
+
+        # one engine run prices the attempts (every attempt executes the
+        # same kernel) and, when an attempt succeeded, is the result
+        alive_sel = alive if (sel is not None
+                              or len(alive) != cfg.n_dpus) else None
+        st_sub, rep, ranks = self._launch_engine(
+            name, binary, args, mram_run, T, wram_extra, alive_sel,
+            ndpus_reg=ndpus_reg)
+        rank_res_ranks = ranks if ranks is not None \
+            else tuple(range(self.topology.n_ranks))
+        for attempt, faulted in wasted_attempts:
+            self._charge_retry(
+                sq.LAUNCH, name, rep.kernel_seconds,
+                {f"rank{r}": rep.kernel_seconds for r in rank_res_ranks},
+                attempt)
+            backoff = policy.backoff_after(attempt)
+            if backoff > 0.0:
+                self._charge_retry(sq.LAUNCH, f"{name}:backoff", backoff,
+                                   {}, attempt)
+        if success_attempt is None:
+            raise DpuFaultError(FaultReport(
+                kind="retry_exhausted", label=name, launch=launch_idx,
+                attempt=policy.max_attempts,
+                dpus=wasted_attempts[-1][1],
+                detail=f"kernel faulted on all {policy.max_attempts} "
+                       "attempts"))
+        self._charge_kernel(name, rep.kernel_seconds + ecc_seconds,
+                            ranks=ranks)
         self.reports.append(rep)
+
+        # expand the survivor rows back to the requested shape: dead rows
+        # carry the untouched input image and DONE status, and
+        # last_launch_faults names them — degraded data is labeled, not
+        # silently wrong
+        if len(alive) != len(requested):
+            pos = {d: i for i, d in enumerate(requested)}
+            st = {}
+            for k, v in st_sub.items():
+                full = np.zeros((len(requested),) + v.shape[1:], v.dtype)
+                for i, d in enumerate(alive):
+                    full[pos[d]] = v[i]
+                st[k] = full
+            for d in requested:
+                if d not in alive_set:
+                    st["mram"][pos[d]] = mram[d, :st["mram"].shape[1]]
+                    st["status"][pos[d]] = engine.DONE
+        else:
+            st = st_sub
+        self.last_launch_faults = {
+            "launch": launch_idx, "requested": tuple(requested),
+            "executed": tuple(alive), "lost": tuple(lost),
+            "dead_before": tuple(sorted(dead_before)),
+            "attempts": len(wasted_attempts) + 1,
+        }
         return st, rep
 
 

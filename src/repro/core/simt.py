@@ -311,10 +311,11 @@ def make_step(cfg: DPUConfig, binary):
     return functools.partial(make_step_traced(cfg), ir), engine.make_cond(cfg)
 
 
-def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None):
+def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None,
+        ndpus_reg=None):
     assert cfg.simt_width > 0
     T = n_threads or cfg.n_tasklets
     assert T % cfg.simt_width == 0, "n_tasklets must be a multiple of warp width"
     from repro.core import compile_cache
     return compile_cache.run(cfg, binary, wram_init, mram_init, n_threads=T,
-                             backend="simt")
+                             backend="simt", ndpus_reg=ndpus_reg)

@@ -61,23 +61,32 @@ class Command:
     hardware resource name (``chan<c>:rank<r>`` link share, ``rank<r>``
     compute slot, ``fabric:rank<r>`` interconnect share) to the busy
     seconds this command holds it — each entry must be <= ``seconds``
-    (a command cannot occupy a resource after it finished)."""
+    (a command cannot occupy a resource after it finished).
+
+    ``wasted`` marks the part of ``seconds`` that produced nothing — the
+    fault runtime re-enqueues failed attempts and backoff holds as
+    fully-wasted commands (``phase="retry"``) so schedules can report
+    goodput.  ``attempt`` records which retry attempt this command was."""
 
     kind: str
     label: str
     seconds: float
     seq: int                       # global submission order (determinism)
     queue: str
-    phase: Optional[str] = None    # timeline phase (h2d/kernel/d2h/inter_dpu)
+    phase: Optional[str] = None    # timeline phase (h2d/kernel/.../retry)
     nbytes: float = 0.0
     resources: Mapping[str, float] = field(default_factory=dict)
     waits: Tuple[Event, ...] = ()
+    wasted: float = 0.0            # seconds of this command producing nothing
+    attempt: int = 0               # retry attempt index (0 = first try)
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown command kind {self.kind!r}")
         if self.seconds < 0:
             raise ValueError("command seconds must be >= 0")
+        if not 0.0 <= self.wasted <= self.seconds:
+            raise ValueError("command wasted must be in [0, seconds]")
         for r, busy in self.resources.items():
             if busy > self.seconds:
                 raise ValueError(
@@ -151,11 +160,12 @@ class QueueRuntime:
     def submit(self, kind: str, label: str, seconds: float, *,
                phase: Optional[str] = None, nbytes: float = 0.0,
                resources: Optional[Mapping[str, float]] = None,
-               waits: Tuple[Event, ...] = ()) -> Command:
+               waits: Tuple[Event, ...] = (), wasted: float = 0.0,
+               attempt: int = 0) -> Command:
         cmd = Command(kind=kind, label=label, seconds=seconds,
                       seq=self._seq, queue=self.current.name, phase=phase,
                       nbytes=nbytes, resources=dict(resources or {}),
-                      waits=tuple(waits))
+                      waits=tuple(waits), wasted=wasted, attempt=attempt)
         self._seq += 1
         self._owned.add(id(cmd))
         return self.current.submit(cmd)

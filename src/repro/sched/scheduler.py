@@ -113,6 +113,28 @@ class Schedule:
             total += cur_f - cur_s
         return total
 
+    def wasted(self) -> float:
+        """Scheduled seconds that produced nothing: failed attempts and
+        backoff holds re-enqueued by the fault runtime.  Each command's
+        waste is its scheduled duration scaled by its own wasted
+        fraction, so contention stretch inflates waste the same way it
+        inflates useful time."""
+        total = 0.0
+        for it in self.items:
+            if it.cmd.wasted > 0.0 and it.cmd.seconds > 0.0:
+                total += ((it.finish - it.start)
+                          * (it.cmd.wasted / it.cmd.seconds))
+        return total
+
+    def goodput(self) -> float:
+        """Useful fraction of the scheduled work: 1 − wasted/total
+        scheduled seconds (1.0 for a fault-free schedule, and for an
+        empty one)."""
+        total = sum(it.finish - it.start for it in self.items)
+        if total <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.wasted() / total)
+
     def exposed(self, phase: str) -> float:
         """Makespan share NOT covered by ``phase``: e.g.
         ``exposed("kernel")`` is the end-to-end time the host spends

@@ -30,7 +30,15 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, *, batch: int = 4, capacity: int = 256):
+    """``pim_pool`` (a :class:`repro.serve.pim_pool.PimDecodePool`)
+    attaches a simulated PIM accelerator: each tick is charged to the
+    pool's system, and a pool that degrades below its availability floor
+    mid-stream triggers host-execution fallback for that tick instead of
+    crashing — requests never get lost, only slower.  ``stats`` counts
+    ``pim_ticks`` vs ``host_ticks``."""
+
+    def __init__(self, cfg, params, *, batch: int = 4, capacity: int = 256,
+                 pim_pool=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -43,12 +51,16 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t: T.decode_step(p, c, t, cfg), donate_argnums=(1,))
         self._next = 0
+        self.pim_pool = pim_pool
+        self.stats = {"pim_ticks": 0, "host_ticks": 0}
+        self.requests: Dict[int, Request] = {}
 
     def submit(self, prompt, max_new: int = 16, eos: int = -1) -> int:
         rid = self._next
         self._next += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new, eos))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new, eos)
+        self.requests[rid] = req
+        self.queue.append(req)
         return rid
 
     # --- internals -----------------------------------------------------------
@@ -86,6 +98,16 @@ class ServeEngine:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
+        # charge the tick to the PIM pool when one is attached; a faulted
+        # pool degrades to host execution for this tick — the token math
+        # below runs on the host either way, so no request is ever lost
+        if self.pim_pool is not None:
+            from repro.faults.model import DpuFaultError
+            try:
+                self.pim_pool.tick(len(active))
+                self.stats["pim_ticks"] += 1
+            except DpuFaultError:
+                self.stats["host_ticks"] += 1
         # decode one token for the pool
         tok_vec = np.zeros(self.batch, np.int32)
         for i in active:
@@ -109,10 +131,10 @@ class ServeEngine:
         return len(active)
 
     def run(self) -> Dict[int, List[int]]:
-        done: Dict[int, List[int]] = {}
-        all_reqs = list(self.queue)
+        """Drain the queue and all active slots; returns outputs for
+        EVERY submitted request — including ones already prefilled into
+        slots by earlier step() calls (a queue snapshot here would
+        silently drop them)."""
         while self.queue or any(s is not None for s in self.slots):
             self.step()
-        for r in all_reqs:
-            done[r.rid] = r.out
-        return done
+        return {rid: r.out for rid, r in self.requests.items()}

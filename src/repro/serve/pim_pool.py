@@ -1,0 +1,63 @@
+"""Simulated PIM decode pool: the serving engine's accelerator lease.
+
+The :class:`ServeEngine` computes tokens on the host either way (the LM
+math is exact); what a PIM pool changes is the *modeled time* of each
+decode tick and — under a fault plan — whether the pool is available at
+all.  :class:`PimDecodePool` charges each tick as a ``modeled_launch``
+on its :class:`~repro.core.host.PIMSystem`, scaled by the surviving-DPU
+fraction (fewer healthy banks means each tick re-runs on a smaller
+slice of the weight-parallel layout), and surfaces pool exhaustion or
+retry-exhausted launches as :class:`DpuFaultError` so the engine can
+fall back to host execution instead of crashing mid-stream."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.faults.model import DpuFaultError, FaultReport
+
+
+class PimDecodePool:
+    """A lease on a PIM system for LM decode ticks.
+
+    ``tick_seconds`` is the healthy-pool modeled time of one pool-wide
+    decode step; a degraded pool stretches it by ``D / healthy`` (the
+    surviving banks re-stream the dead banks' weight shards).
+    ``min_fraction`` is the availability floor: below it the pool
+    refuses to serve (a cluster would reschedule the replica) and every
+    :meth:`tick` raises :class:`DpuFaultError`."""
+
+    def __init__(self, system, tick_seconds: float = 1e-4,
+                 min_fraction: float = 0.25,
+                 ranks: Optional[Sequence[int]] = None):
+        if tick_seconds <= 0:
+            raise ValueError("tick_seconds must be positive")
+        if not 0.0 < min_fraction <= 1.0:
+            raise ValueError("min_fraction must be in (0, 1]")
+        self.system = system
+        self.tick_seconds = tick_seconds
+        self.min_fraction = min_fraction
+        self.ranks = None if ranks is None else list(ranks)
+        self.ticks = 0
+
+    @property
+    def healthy_fraction(self) -> float:
+        total = self.system.cfg.n_dpus
+        return float(self.system.active_mask.sum()) / total if total else 0.0
+
+    def tick(self, n_active: int = 1) -> float:
+        """Charge one pool-wide decode tick; returns the modeled seconds.
+
+        Raises :class:`DpuFaultError` when the pool has degraded below
+        ``min_fraction`` (or the underlying launch exhausts its
+        retries) — the caller is expected to catch it and decode on the
+        host instead."""
+        frac = self.healthy_fraction
+        if frac < self.min_fraction:
+            raise DpuFaultError(FaultReport(
+                kind="pool_degraded", label="decode",
+                detail=f"PIM pool at {frac:.0%} healthy DPUs "
+                       f"< {self.min_fraction:.0%} floor"))
+        seconds = self.tick_seconds / frac
+        self.system.modeled_launch("decode", seconds, ranks=self.ranks)
+        self.ticks += 1
+        return seconds

@@ -79,17 +79,46 @@ class Workload:
             # (engine WRAM array); MRAM stays empty (paper §V-D relink)
             D = system.cfg.n_dpus
             mram = np.zeros((D, 2), np.int32)
-            st, rep = system.launch(self.name, binary, hd.args, mram,
-                                    n_threads=n_threads, wram_extra=hd.mram)
+            st, rep = self.recover_launch(system, self.name, binary,
+                                          hd.args, mram,
+                                          n_threads=n_threads,
+                                          wram_extra=hd.mram)
             mem = np.asarray(st["wram"])
         else:
-            st, rep = system.launch(self.name, binary, hd.args, hd.mram,
-                                    n_threads=n_threads)
+            st, rep = self.recover_launch(system, self.name, binary,
+                                          hd.args, hd.mram,
+                                          n_threads=n_threads)
             mem = np.asarray(st["mram"])
         if not hd.check(mem):
             raise AssertionError(f"{self.name}: output mismatch vs oracle")
         self.readback(system, hd, mem)
         return st, rep
+
+    def recover_launch(self, system: PIMSystem, name: str, binary, args,
+                       mram, *, n_threads=None, wram_extra=None, dpus=None,
+                       ndpus_reg=None):
+        """Launch with the system's fault-recovery policy.
+
+        Fault-free systems go straight to :meth:`PIMSystem.launch`
+        (bit-exact with pre-fault builds).  Under a fault plan,
+        ``recovery="raise"`` is fail-stop (faults propagate as
+        :class:`~repro.faults.model.DpuFaultError`) and ``"remap"``
+        re-executes lost shards on surviving DPUs via
+        :func:`repro.faults.remap.launch_with_remap` — workloads whose
+        kernels are arg-addressed get degraded-mode execution for free
+        by routing launches through this hook."""
+        if system.faults is None:
+            return system.launch(name, binary, args, mram,
+                                 n_threads=n_threads, wram_extra=wram_extra,
+                                 dpus=dpus)
+        if system.recovery == "raise":
+            return system.launch(name, binary, args, mram,
+                                 n_threads=n_threads, wram_extra=wram_extra,
+                                 dpus=dpus, ndpus_reg=ndpus_reg)
+        from repro.faults.remap import launch_with_remap
+        return launch_with_remap(system, name, binary, args, mram,
+                                 n_threads=n_threads, wram_extra=wram_extra,
+                                 dpus=dpus, ndpus_reg=ndpus_reg)
 
     def readback(self, system: PIMSystem, hd: HostData, mem: np.ndarray):
         """Post-kernel epilogue: charge the host readback. Subclasses may

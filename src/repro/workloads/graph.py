@@ -223,8 +223,8 @@ class BFS(Workload):
             args = np.zeros((D, 9), np.int32)
             for d in range(D):
                 args[d] = [pad, level, op, oa, od, oc, on, *ranges[d]]
-            st, rep = system.launch("BFS", binary, args, mram,
-                                    n_threads=n_threads)
+            st, rep = self.recover_launch(system, "BFS", binary, args, mram,
+                                          n_threads=n_threads)
             reps.append(rep)
             out = np.asarray(st["mram"])
             # inter-DPU merge through the comm fabric: every DPU ends up

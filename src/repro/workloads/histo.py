@@ -198,12 +198,22 @@ class _HistBase(Workload):
         # the direct fabric.
         off = hd.extra["hist_off"]
         hist = np.array(mem[:, off:off + N_BINS])  # writable shadow
-        collectives.reduce(system, hist, 0, N_BINS, op="sum", root=0)
-        if not np.array_equal(hist[0], hd.extra["want_merged"]):
+        # under faults, root the merge at the first surviving DPU (DPU 0
+        # may be dead; a dead root would raise a typed DpuFaultError)
+        root = 0
+        if (getattr(system, "faults", None) is not None
+                and not system.active_mask[0]):
+            alive = system.active_dpus
+            if not alive:
+                raise AssertionError(f"{self.name}: no surviving DPU "
+                                     "to merge the histogram on")
+            root = alive[0]
+        collectives.reduce(system, hist, 0, N_BINS, op="sum", root=root)
+        if not np.array_equal(hist[root], hd.extra["want_merged"]):
             raise AssertionError(f"{self.name}: merged histogram mismatch")
-        # the host reads back only the merged histogram, from DPU 0
+        # the host reads back only the merged histogram, from the root
         final = np.zeros(system.cfg.n_dpus)
-        final[0] = 4.0 * N_BINS
+        final[root] = 4.0 * N_BINS
         system.d2h(final)
 
 

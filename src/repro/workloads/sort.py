@@ -296,23 +296,29 @@ class SSORT(Workload):
         img[:, :n] = keys
         args = np.tile(np.array([n, 0, 4 * o_loc], np.int32), (D, 1))
         system.h2d(4.0 * n)
-        st, rep1 = system.launch("SSORT-L", lsort, args, img,
-                                 n_threads=n_threads)
+        st, rep1 = self.recover_launch(system, "SSORT-L", lsort, args, img,
+                                       n_threads=n_threads)
         local = np.asarray(st["mram"])[:, o_loc:o_loc + n].copy()
 
-        # splitters: gather evenly spaced samples to DPU 0, pick D-1
+        # splitters: gather evenly spaced samples to a root DPU, pick D-1
         # quantiles from the sample distribution, broadcast them back
+        # (under faults, root at the first surviving DPU — a dead root
+        # would raise a typed DpuFaultError)
+        root = 0
+        if (getattr(system, "faults", None) is not None
+                and not system.active_mask[0]):
+            root = system.active_dpus[0]
         s = min(SAMPLES, n)
         pos = ((np.arange(s) + 1) * n) // s - 1
         img2 = np.zeros((D, cfg.mram_words), np.int32)
         o_gath, o_spl = s, s + D * s
         img2[:, :s] = local[:, pos]
-        collectives.gather(system, img2, 0, o_gath, s, root=0)
-        allsamp = np.sort(img2[0, o_gath:o_gath + D * s])
+        collectives.gather(system, img2, 0, o_gath, s, root=root)
+        allsamp = np.sort(img2[root, o_gath:o_gath + D * s])
         spl = allsamp[(np.arange(1, D) * (D * s)) // D]    # D-1 splitters
-        img2[0, o_spl:o_spl + D - 1] = spl
-        collectives.broadcast(system, img2, o_spl, D - 1, root=0)
-        spl = img2[0, o_spl:o_spl + D - 1]
+        img2[root, o_spl:o_spl + D - 1] = spl
+        collectives.broadcast(system, img2, o_spl, D - 1, root=root)
+        spl = img2[root, o_spl:o_spl + D - 1]
 
         # sorted rows + splitters -> contiguous buckets (bucket j = keys
         # in [spl[j-1], spl[j]), ties to the higher bucket)
@@ -348,8 +354,10 @@ class SSORT(Workload):
         collectives.alltoall(system, img3, 0, o_recv, C)
         args2 = np.tile(np.array([4 * C, 4 * o_cin, 4 * o_recv, 4 * o_out],
                                  np.int32), (D, 1))
-        st, rep2 = system.launch("SSORT-M", merge, args2, img3,
-                                 n_threads=n_threads)
+        # SSORT-M reads the N_DPUS register to size its bucket loops, so
+        # a degraded remap launch must keep the logical width D
+        st, rep2 = self.recover_launch(system, "SSORT-M", merge, args2, img3,
+                                       n_threads=n_threads, ndpus_reg=D)
         out = np.asarray(st["mram"])
         system.d2h(4.0 * recv_tot.astype(np.float64))
 
