@@ -1,0 +1,178 @@
+"""Multi-tenant cluster load benchmark: SLO metrics under fault pressure.
+
+Drives a mixed 4-tenant Poisson stream (graph BFS, sample sort, LM
+decode bursts, histogram batch) through :class:`repro.cluster.PimCluster`
+on one shared 8-rank system and scores each placement policy at a 0%
+and a 2% per-launch permanent-fault rate: p50/p99 latency, queueing
+delay, rank utilization, and goodput (ideal seconds delivered / actual
+seconds spent — reschedule re-execution, degraded-rank stretch, and
+failed jobs' partial work all count against it).
+
+The interesting comparison is the fault-aware policy against the
+health-blind baselines under nonzero faults: skipping degraded ranks,
+promoting the provisioned spares, and rescheduling replicas buys
+strictly more goodput than first-fit at the same fault rate — the
+``--check`` gate CI pins.
+
+    PYTHONPATH=src python benchmarks/cluster_load.py [--scale 1.0]
+    PYTHONPATH=src python benchmarks/cluster_load.py --smoke
+    PYTHONPATH=src python benchmarks/cluster_load.py --check
+    PYTHONPATH=src python -m benchmarks.run --suite cluster
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster import (PimCluster, POLICIES, TenantSpec,  # noqa: E402
+                           poisson_stream)
+from repro.core.config import DPUConfig  # noqa: E402
+from repro.core.host import PIMSystem  # noqa: E402
+from repro.faults.model import FaultPlan  # noqa: E402
+
+N_RANKS = 8
+SPARES = 2
+SEED = 7
+FAULT_SEED = 1
+
+
+def _system(rate: float, mode: str = "async") -> PIMSystem:
+    faults = FaultPlan(seed=FAULT_SEED, p_dpu_permanent=rate) \
+        if rate > 0 else None
+    return PIMSystem(DPUConfig(n_dpus=4 * N_RANKS, n_ranks=N_RANKS,
+                               n_channels=4, mram_bytes=1 << 20),
+                     mode=mode, faults=faults)
+
+
+def tenant_mix(scale: float = 1.0) -> List[TenantSpec]:
+    """The 4-tenant reference mix: a latency-sensitive LM serving
+    tenant, a priority graph tenant on 2-rank subsets, and two batch
+    tenants filling the fleet."""
+    return [
+        TenantSpec("graph", rate_hz=400.0, kinds=("BFS",), n_ranks=2,
+                   priority=1, slo_seconds=0.05 / max(scale, 1e-9)),
+        TenantSpec("sort", rate_hz=300.0, kinds=("SSORT", "HST-S")),
+        TenantSpec("lm", rate_hz=200.0, kinds=("lm_decode",), size=8,
+                   n_ranks=2, priority=2, slo_seconds=0.02),
+        TenantSpec("hist", rate_hz=250.0, kinds=("HST-S",)),
+    ]
+
+
+def load_table(scale: float = 1.0, rates=(0.0, 0.02),
+               policies=POLICIES) -> List[Dict]:
+    """Per (fault rate, policy) scorecard for the 4-tenant mix."""
+    horizon = 0.08 * scale
+    jobs = poisson_stream(tenant_mix(scale), horizon=horizon, seed=SEED)
+    rows = []
+    for rate in rates:
+        for policy in policies:
+            cluster = PimCluster(_system(rate), policy=policy,
+                                 spare_ranks=SPARES)
+            rep = cluster.run(jobs)
+            m = rep.metrics()
+            rows.append({
+                "bench": "cluster_load", "fault_rate": rate,
+                "policy": policy, "jobs": m["jobs"],
+                "completed": m["completed"], "failed": m["failed"],
+                "p50_ms": round(m["p50_latency"] * 1e3, 3),
+                "p99_ms": round(m["p99_latency"] * 1e3, 3),
+                "queue_ms": round(m["mean_queueing"] * 1e3, 3),
+                "slo": round(m["slo_attainment"], 3),
+                "utilization": round(rep.utilization(), 4),
+                "goodput": round(rep.goodput(), 4),
+                "reschedules": m["reschedules"],
+                "preemptions": m["preemptions"],
+            })
+    return rows
+
+
+def smoke() -> Dict:
+    """CI smoke: a small 2-tenant fault-free stream must fully drain —
+    every admitted job completes, goodput is exactly 1.0, and the
+    latency percentiles are finite."""
+    tenants = [
+        TenantSpec("a", rate_hz=300.0, kinds=("BFS", "HST-S"),
+                   priority=1, slo_seconds=0.05),
+        TenantSpec("b", rate_hz=200.0, kinds=("lm_decode",), size=4),
+    ]
+    jobs = poisson_stream(tenants, horizon=0.03, seed=SEED)
+    rep = PimCluster(_system(0.0), policy="fault_aware").run(jobs)
+    m = rep.metrics()
+    assert m["jobs"] == len(jobs) and m["failed"] == 0, \
+        f"smoke stream did not drain: {m}"
+    assert m["completed"] == len(rep.admissions), \
+        "every admitted job must complete"
+    assert math.isfinite(m["p99_latency"]) and math.isfinite(
+        m["p50_latency"]), "latency percentiles must be finite"
+    assert rep.goodput() == 1.0, \
+        f"fault-free goodput must be exactly 1.0, got {rep.goodput()}"
+    return {"bench": "cluster_smoke", "jobs": m["jobs"],
+            "completed": m["completed"],
+            "p50_ms": round(m["p50_latency"] * 1e3, 3),
+            "p99_ms": round(m["p99_latency"] * 1e3, 3),
+            "goodput": rep.goodput()}
+
+
+def check(scale: float = 1.0) -> List[Dict]:
+    """CI gate: at a 2% per-launch fault rate the fault-aware policy
+    must deliver strictly more goodput than health-blind first-fit
+    (same stream, same fault plan, same spares provisioned)."""
+    rows = load_table(scale, rates=(0.02,),
+                      policies=("first_fit", "fault_aware"))
+    by = {r["policy"]: r for r in rows}
+    fa, ff = by["fault_aware"], by["first_fit"]
+    if not fa["goodput"] > ff["goodput"]:
+        raise SystemExit(
+            f"FAIL: fault-aware goodput {fa['goodput']} must strictly "
+            f"beat first-fit {ff['goodput']} at 2% faults")
+    if not fa["completed"] >= ff["completed"]:
+        raise SystemExit(
+            f"FAIL: fault-aware completed {fa['completed']} jobs < "
+            f"first-fit {ff['completed']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fault-free stream; assert full drain")
+    ap.add_argument("--check", action="store_true",
+                    help="gate: fault-aware beats first-fit at 2% faults")
+    args = ap.parse_args()
+
+    if args.smoke:
+        row = smoke()
+        print(f"cluster smoke OK: {row['completed']}/{row['jobs']} jobs, "
+              f"p99 {row['p99_ms']:.2f} ms, goodput {row['goodput']:.4f}")
+        return
+    if args.check:
+        rows = check(args.scale)
+        by = {r["policy"]: r for r in rows}
+        print(f"cluster check OK: fault_aware goodput "
+              f"{by['fault_aware']['goodput']:.4f} > first_fit "
+              f"{by['first_fit']['goodput']:.4f} at 2% faults")
+        return
+
+    rows = load_table(args.scale)
+    print(f"{'rate':>5} {'policy':>12} {'jobs':>5} {'done':>5} {'fail':>5} "
+          f"{'p50_ms':>8} {'p99_ms':>8} {'queue_ms':>9} {'slo':>5} "
+          f"{'util':>6} {'goodput':>8}")
+    for r in rows:
+        print(f"{r['fault_rate']:>5.2f} {r['policy']:>12} {r['jobs']:>5} "
+              f"{r['completed']:>5} {r['failed']:>5} {r['p50_ms']:>8.2f} "
+              f"{r['p99_ms']:>8.2f} {r['queue_ms']:>9.2f} {r['slo']:>5.2f} "
+              f"{r['utilization']:>6.2f} {r['goodput']:>8.4f}")
+    print("\nFault-free goodput is 1.0 for every policy (nothing wasted); "
+          "at 2% the fault-aware policy retires sick ranks, promotes the "
+          "2 provisioned spares, and reschedules replicas — the goodput "
+          "gap over first/best-fit is the price of health-blind placement.")
+
+
+if __name__ == "__main__":
+    main()

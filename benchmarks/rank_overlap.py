@@ -112,6 +112,66 @@ def rank_overlap(scale: float = 1.0, ranks_list=(2, 4),
     return rows
 
 
+#: measured multi-rank transfer weak scaling, Gomez-Luna et al.
+#: (arXiv:2110.01709): aggregate CPU->DPU bandwidth of R ranks driving
+#: ONE memory channel concurrently, relative to a single rank.  The real
+#: UPMEM config is 2 ranks/channel and sustains ~1.2x (the host copy
+#: threads contend on the channel bus); 4 ranks/channel is the paper's
+#: saturating extrapolation, down-weighted below because no shipping
+#: module has it.
+MEASURED_WEAK_SCALING = {2: 1.2, 4: 1.3}
+MEASURED_WEIGHT = {2: 1.0, 4: 0.25}
+CALIBRATION_GRID = (1.0, 1.25, 1.5, 1.67, 2.0, 2.5, 3.0, 4.0)
+
+
+def contention_calibration(scale: float = 1.0) -> List[Dict]:
+    """Sweep ``channel_contention`` against the measured weak-scaling
+    shape and report the best-fitting factor.
+
+    For each factor the model's aggregate speedup is measured directly:
+    R ranks on one channel each h2d their own payload concurrently; the
+    async makespan vs the single-rank time gives the aggregate scaling
+    (analytically R/factor — the later arrivals stretch while sharing
+    the physical link).  The factor minimizing the weighted relative
+    error vs ``MEASURED_WEAK_SCALING`` is the shipped
+    ``DPUConfig.channel_contention`` default (1.67 = 2/1.2: exact on the
+    measured 2-ranks-per-channel point); a regression test pins it."""
+    stage_bytes = 1e6 * scale
+    rows = []
+    best = None
+    for f in CALIBRATION_GRID:
+        err = 0.0
+        model = {}
+        for ranks, meas in sorted(MEASURED_WEAK_SCALING.items()):
+            sys_ = PIMSystem(_cfg(ranks, 1, contention=f), mode="async")
+            topo = sys_.topology
+            for r in range(ranks):
+                vec = np.zeros(topo.n_dpus)
+                vec[topo.dpu_slice(r)] = stage_bytes
+                with sys_.stream(f"rank{r}"):
+                    sys_.h2d(vec, label=f"weak r{r}")
+            mk = sys_.sync().makespan
+            ref = PIMSystem(_cfg(ranks, 1, contention=f), mode="async")
+            vec = np.zeros(topo.n_dpus)
+            vec[topo.dpu_slice(0)] = stage_bytes
+            ref.h2d(vec)
+            one = ref.sync().makespan
+            model[ranks] = ranks * one / mk
+            err += (MEASURED_WEIGHT[ranks]
+                    * abs(model[ranks] - meas) / meas)
+        rows.append({"bench": "rank_calibration", "contention": f,
+                     "model_x2": round(model[2], 3),
+                     "model_x4": round(model[4], 3),
+                     "weighted_rel_err": round(err, 4)})
+        if best is None or err < best[0]:
+            best = (err, f)
+    from repro.core.config import DPUConfig
+    rows.append({"bench": "rank_calibration", "best_fit": best[1],
+                 "shipped_default": DPUConfig().channel_contention,
+                 "measured": MEASURED_WEAK_SCALING})
+    return rows
+
+
 def contention_sweep(scale: float = 1.0, ranks: int = 4,
                      factors=(1.0, 1.5, 2.0, 4.0),
                      n_iters: int = 3) -> List[Dict]:
@@ -139,8 +199,11 @@ def main() -> None:
     ser = PIMSystem(_cfg(2, 2))          # mode="inorder" default
     _submit(ser, True, args.iters, 1e6 * args.scale, 1024)
     ser.sync()
-    assert ser.timeline.elapsed == ser.timeline.total, \
-        "in-order default must stay bit-exact with the serialized sum"
+    # same durations, two summation orders (scheduler finish chain vs
+    # per-phase accumulators) -> compare to the last ulp, not bitwise
+    assert abs(ser.timeline.elapsed - ser.timeline.total) \
+        <= 1e-12 * ser.timeline.total, \
+        "in-order default must reproduce the serialized sum"
 
     rows = rank_overlap(args.scale, n_iters=args.iters)
     print("== per-rank launches + disjoint-rank collectives vs "
@@ -154,6 +217,19 @@ def main() -> None:
               f"{row['speedup']:>8.2f}")
         if row["per_rank_ms"] >= row["whole_ms"]:
             ok = False
+
+    krows = contention_calibration(args.scale)
+    print("\n== contention calibration vs measured weak scaling "
+          "(arXiv:2110.01709) ==")
+    print(f"{'factor':>7} {'model_x2':>9} {'model_x4':>9} {'rel_err':>8}")
+    for row in krows[:-1]:
+        print(f"{row['contention']:>7.2f} {row['model_x2']:>9.2f} "
+              f"{row['model_x4']:>9.2f} {row['weighted_rel_err']:>8.4f}")
+    summary = krows[-1]
+    print(f"best fit {summary['best_fit']} == shipped default "
+          f"{summary['shipped_default']}")
+    if summary["best_fit"] != summary["shipped_default"]:
+        ok = False
 
     crows = contention_sweep(args.scale, n_iters=args.iters)
     print("\n== link-share contention factor (4 ranks, 1 channel) ==")

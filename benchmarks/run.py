@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows (one per figure/design point).
 the suite at CI scale in a few minutes.  ``--suite`` selects a family
 (``figs`` paper figures, ``comm`` interconnect/collectives, ``overlap``
 async-pipeline, ``lm`` serving roofline, ``faults`` fault-injection
-availability/goodput, ``all``); ``--only`` further filters by substring.
+availability/goodput, ``cluster`` multi-tenant cluster runtime,
+``all``); ``--only`` further filters by substring — a filter matching
+nothing is an error listing the valid bench names, not a silent no-op.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 0.05] \\
         [--suite comm] [--only fig11]
@@ -17,7 +19,7 @@ import json
 import time
 
 #: suite families selectable via --suite (benches declare theirs inline)
-SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults")
+SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults", "cluster")
 
 
 def _emit(name: str, wall_s: float, rows):
@@ -34,8 +36,8 @@ def main() -> None:
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
     args = ap.parse_args()
 
-    from benchmarks import comm_scaling, fault_tolerance, lm_roofline, \
-        overlap_scaling, pim_figs, rank_overlap
+    from benchmarks import cluster_load, comm_scaling, fault_tolerance, \
+        lm_roofline, overlap_scaling, pim_figs, rank_overlap
 
     char = None
 
@@ -59,6 +61,7 @@ def main() -> None:
         "overlap_depth": ("overlap", lambda: overlap_scaling.overlap_depth_sweep(args.scale)),
         "rank_overlap": ("overlap", lambda: rank_overlap.rank_overlap(args.scale)),
         "rank_contention": ("overlap", lambda: rank_overlap.contention_sweep(args.scale)),
+        "rank_calibration": ("overlap", lambda: rank_overlap.contention_calibration(args.scale)),
         "fig11_simt": ("figs", lambda: pim_figs.fig11_simt(args.scale)),
         "fig12_ilp": ("figs", lambda: pim_figs.fig12_ilp(args.scale)),
         "fig13_mram_bw": ("figs", lambda: pim_figs.fig13_mram_bw(args.scale)),
@@ -69,6 +72,9 @@ def main() -> None:
         "fault_smoke": ("faults", lambda: [fault_tolerance.smoke()]),
         "fault_tolerance": ("faults", lambda: fault_tolerance.sweep(
             args.scale, rates=[0.0, 0.02, 0.05], trials=2, launches=4)),
+        "cluster_smoke": ("cluster", lambda: [cluster_load.smoke()]),
+        "cluster_load": ("cluster", lambda: cluster_load.load_table(
+            args.scale)),
     }
     bad = {k for k, (s, _) in benches.items() if s not in SUITE_NAMES}
     assert not bad, f"benches with unknown suite: {bad}"
@@ -76,6 +82,14 @@ def main() -> None:
                 if args.suite in ("all", suite)}
     if args.only:
         selected = {k: v for k, v in selected.items() if args.only in k}
+    if not selected:
+        # a typo'd --only used to "run" zero benches and exit 0 — make it
+        # an error that names what would have matched
+        valid = ", ".join(sorted(benches))
+        raise SystemExit(
+            f"no benchmark matches --suite {args.suite!r}"
+            + (f" --only {args.only!r}" if args.only else "")
+            + f"; valid names: {valid}")
 
     for name, fn in selected.items():
         t0 = time.time()

@@ -1,6 +1,14 @@
 """Batched serving demo: continuous batching over a slot pool.
 
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m
+
+``--cluster`` submits through the multi-tenant cluster runtime instead
+of attaching a private accelerator: the serving replica leases ranks
+from a shared :class:`repro.cluster.PimCluster` (fault-aware placement)
+and its decode ticks are charged to the shared system's timeline next
+to everyone else's work.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --cluster
 """
 import argparse
 import os
@@ -17,16 +25,37 @@ from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
 
 
+def _cluster_pool(n_ranks: int):
+    """Lease decode ranks from a shared fault-aware cluster."""
+    from repro.cluster import PimCluster
+    from repro.core.config import DPUConfig
+    from repro.core.host import PIMSystem
+    system = PIMSystem(DPUConfig(n_dpus=32, n_ranks=8, n_channels=4,
+                                 mram_bytes=1 << 20), mode="async")
+    cluster = PimCluster(system, policy="fault_aware", spare_ranks=2)
+    lease = cluster.lease("serve_lm", n_ranks=n_ranks)
+    return cluster, lease
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--cluster", action="store_true",
+                    help="lease decode ranks from the shared PIM cluster")
+    ap.add_argument("--lease-ranks", type=int, default=2)
     args = ap.parse_args()
+
+    cluster = lease = None
+    pool = None
+    if args.cluster:
+        cluster, lease = _cluster_pool(args.lease_ranks)
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, batch=4, capacity=128)
+    eng = ServeEngine(cfg, params, batch=4, capacity=128,
+                      pim_pool=lease.pool if lease else pool)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -38,6 +67,14 @@ def main():
     total = sum(len(v) for v in outs.values())
     print(f"arch={cfg.name} served {len(outs)} requests "
           f"({total} tokens) in {dt:.1f}s on a 4-slot pool")
+    if cluster is not None:
+        tl = cluster.system.timeline
+        print(f"cluster lease: ranks={list(lease.ranks)} "
+              f"policy={cluster.policy} "
+              f"pim_ticks={eng.stats['pim_ticks']} "
+              f"host_ticks={eng.stats['host_ticks']} "
+              f"modeled_decode={tl.kernel * 1e3:.2f}ms")
+        cluster.release(lease)
     for rid, toks in sorted(outs.items()):
         print(f"  req{rid}: {toks}")
 

@@ -1,0 +1,27 @@
+"""repro.cluster — multi-tenant PIM cluster runtime.
+
+Trace-driven admission of mixed tenant jobs (PrIM kernels + LM decode)
+onto disjoint rank subsets of one shared :class:`PIMSystem`, with
+pluggable fault-aware placement, priority/preemption, and SLO metrics.
+
+    from repro.cluster import (TenantSpec, poisson_stream, PimCluster)
+
+    stream = poisson_stream([TenantSpec("a", rate_hz=200.0)], horizon=0.05)
+    report = PimCluster(system, policy="fault_aware").run(stream)
+    print(report.table())
+"""
+from repro.cluster.arrivals import (JOB_KINDS, JobSpec, TenantSpec,
+                                    poisson_stream, save_trace,
+                                    trace_stream)
+from repro.cluster.metrics import (COMPLETED, FAILED, ClusterReport,
+                                   JobOutcome)
+from repro.cluster.scheduler import (POLICIES, ClusterLease, JobProfile,
+                                     JobStep, PimCluster, measure_profile,
+                                     synthetic_profiles)
+
+__all__ = [
+    "JOB_KINDS", "JobSpec", "TenantSpec", "poisson_stream", "save_trace",
+    "trace_stream", "COMPLETED", "FAILED", "ClusterReport", "JobOutcome",
+    "POLICIES", "ClusterLease", "JobProfile", "JobStep", "PimCluster",
+    "measure_profile", "synthetic_profiles",
+]

@@ -1,0 +1,587 @@
+"""Multi-tenant cluster scheduler: trace-driven admission onto disjoint
+rank subsets with pluggable, fault-aware placement.
+
+The cluster turns the per-rank resource model (PR 4: subset launches,
+``chan<c>:rank<r>`` link shares) and the fault layer (PR 6:
+``active_mask``, retry pricing, degraded pools) into a system model: a
+stream of :class:`~repro.cluster.arrivals.JobSpec`\\ s is admitted onto
+disjoint rank subsets of ONE shared :class:`~repro.core.host.PIMSystem`,
+with priority queues, preemption at kernel-launch boundaries, and a
+placement policy that may read the live fault state.
+
+**Execution model.**  Each job is planned as an ordered list of
+:class:`JobStep`\\ s — its recorded command stream.  The PrIM job kinds
+(BFS, HST-S, SSORT) are planned from a :class:`JobProfile` captured by
+running the *real* workload once (:func:`measure_profile` wraps
+``Workload.run`` on a reference rank and replays its timeline events);
+``lm_decode`` jobs tick a :class:`~repro.serve.pim_pool.PimDecodePool`
+leased on the job's ranks.  Every step is submitted to the shared
+system — transfers re-priced by the :class:`RankTopology` on the job's
+lanes, kernels as ``modeled_launch`` on the job's ranks — so retries,
+link degradation, and permanent DPU deaths from the system's
+:class:`FaultPlan` land on tenants exactly as the fault runtime prices
+them, and disjoint-rank tenants overlap in an async schedule.
+
+**Clock.**  The cluster advances its own event clock from the *modeled
+seconds* each submission charges (``timeline.total`` deltas, which are
+eager and mode-independent), never from the overlapped
+:mod:`repro.sched` schedule — same-seed runs are bit-deterministic
+across ``mode="inorder"``/``"async"`` and across repeats.
+
+**Placement policies** (``policy=``):
+
+* ``first_fit``   — lowest-indexed free ranks, blind to health;
+* ``best_fit``    — free ranks with the *fewest* surviving DPUs first
+  (pack degraded capacity, keep healthy ranks free — the bin-packing
+  instinct, exactly wrong under faults);
+* ``fault_aware`` — skip ranks degraded below ``health_floor``, prefer
+  the healthiest ranks, promote provisioned spares fleet-wide when a
+  rank is retired, and reschedule a job (replica restart; ``lm_decode``
+  resumes its remaining ticks) when its ranks die or its decode pool
+  trips ``min_fraction`` mid-run.
+
+Degraded execution is priced like the PR 6 decode pool: a kernel step on
+a subset with ``h`` of ``n`` lanes alive stretches by ``n / h`` (the
+survivors re-stream the dead lanes' shards), so parking tenants on sick
+ranks costs real goodput.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.arrivals import JobSpec
+from repro.cluster.metrics import COMPLETED, FAILED, ClusterReport, JobOutcome
+from repro.faults.model import DpuFaultError, FaultReport
+
+POLICIES = ("first_fit", "best_fit", "fault_aware")
+
+# job run states
+_QUEUED, _RUNNING, _DONE = "queued", "running", "done"
+
+
+@dataclass(frozen=True)
+class JobStep:
+    """One replayable command of a job's plan.
+
+    ``h2d``/``d2h`` steps carry per-DPU bytes (re-priced on the job's
+    lanes by the topology); ``kernel``/``inter_dpu`` steps carry the
+    profiled healthy-subset seconds; ``tick`` steps are priced by the
+    job's :class:`PimDecodePool` lease."""
+
+    phase: str                     # h2d | kernel | inter_dpu | d2h | tick
+    seconds: float = 0.0
+    bytes_per_dpu: float = 0.0
+    nbytes: float = 0.0            # exchange payload (reporting only)
+    label: str = ""
+
+
+@dataclass(frozen=True)
+class JobProfile:
+    """Recorded command stream of one job kind at ``size = 1``."""
+
+    kind: str
+    steps: Tuple[JobStep, ...]
+
+    def plan(self, size: float) -> List[JobStep]:
+        """Scale the profile to a job size (work multiplier)."""
+        out = []
+        for s in self.steps:
+            out.append(JobStep(s.phase, s.seconds * size,
+                               s.bytes_per_dpu * size, s.nbytes * size,
+                               s.label))
+        return out
+
+
+_MEASURED_CACHE: Dict[tuple, JobProfile] = {}
+
+
+def measure_profile(kind: str, *, n_dpus: int = 4, n_threads: int = 8,
+                    scale: float = 0.05, seed: int = 0,
+                    mram_bytes: int = 1 << 21) -> JobProfile:
+    """Capture a job kind's command stream by running the real workload
+    (``Workload.run`` — kernels, collectives, oracle check and all) on a
+    fresh single-rank reference system, then distilling its timeline
+    events into replayable steps.  Cached per parameter set: the engine
+    runs once per kind, every job replays the recording."""
+    key = (kind, n_dpus, n_threads, scale, seed, mram_bytes)
+    if key in _MEASURED_CACHE:
+        return _MEASURED_CACHE[key]
+    import repro.workloads as wl
+    from repro.core.config import DPUConfig
+    from repro.core.host import PIMSystem
+    system = PIMSystem(DPUConfig(n_dpus=n_dpus, n_tasklets=n_threads,
+                                 mram_bytes=mram_bytes))
+    wl.get(kind).run(system, n_threads=n_threads, scale=scale, seed=seed)
+    steps: List[JobStep] = []
+    for phase, label, sec, nbytes in system.timeline.events:
+        if phase in ("h2d", "d2h"):
+            steps.append(JobStep(phase, bytes_per_dpu=nbytes / n_dpus,
+                                 label=label))
+        elif phase == "kernel":
+            steps.append(JobStep("kernel", seconds=sec, label=label))
+        elif phase == "inter_dpu":
+            steps.append(JobStep("inter_dpu", seconds=sec, nbytes=nbytes,
+                                 label=label))
+    prof = JobProfile(kind=kind, steps=tuple(steps))
+    _MEASURED_CACHE[key] = prof
+    return prof
+
+
+def synthetic_profiles() -> Dict[str, JobProfile]:
+    """Engine-free stand-in profiles with each kind's characteristic
+    shape (BFS iterates kernel+frontier exchange; HST-S is one
+    bucket-count kernel; SSORT alternates sort kernels with splitter /
+    bucket alltoall exchanges).  Tests and quick sweeps use these;
+    ``profiles="measured"`` records the real workloads instead."""
+    mk = JobStep
+    return {
+        "BFS": JobProfile("BFS", (
+            mk("h2d", bytes_per_dpu=16384, label="bfs:stage"),
+            mk("kernel", seconds=8e-4, label="bfs:iter0"),
+            mk("inter_dpu", seconds=2e-4, nbytes=4096, label="frontier"),
+            mk("kernel", seconds=8e-4, label="bfs:iter1"),
+            mk("inter_dpu", seconds=2e-4, nbytes=4096, label="frontier"),
+            mk("kernel", seconds=8e-4, label="bfs:iter2"),
+            mk("d2h", bytes_per_dpu=4096, label="bfs:levels"),
+        )),
+        "HST-S": JobProfile("HST-S", (
+            mk("h2d", bytes_per_dpu=32768, label="hst:stage"),
+            mk("kernel", seconds=1.2e-3, label="hst:count"),
+            mk("d2h", bytes_per_dpu=1024, label="hst:bins"),
+        )),
+        "SSORT": JobProfile("SSORT", (
+            mk("h2d", bytes_per_dpu=32768, label="ssort:stage"),
+            mk("kernel", seconds=9e-4, label="ssort:local"),
+            mk("inter_dpu", seconds=3e-4, nbytes=8192, label="splitters"),
+            mk("inter_dpu", seconds=5e-4, nbytes=32768, label="buckets"),
+            mk("kernel", seconds=1.1e-3, label="ssort:merge"),
+            mk("d2h", bytes_per_dpu=32768, label="ssort:runs"),
+        )),
+    }
+
+
+class _Run:
+    """Mutable per-job scheduler state."""
+
+    __slots__ = ("spec", "steps", "next_step", "ranks", "lanes", "pool",
+                 "t_start", "t_done", "spent", "ideal_acc", "useful",
+                 "reschedules", "preemptions", "preempt_flag", "state",
+                 "fail_reason")
+
+    def __init__(self, spec: JobSpec, steps: List[JobStep]):
+        self.spec = spec
+        self.steps = steps
+        self.next_step = 0
+        self.ranks: Optional[Tuple[int, ...]] = None
+        self.lanes: List[int] = []
+        self.pool = None
+        self.t_start: Optional[float] = None
+        self.t_done = 0.0
+        self.spent = 0.0
+        self.ideal_acc = 0.0
+        self.useful = 0.0
+        self.reschedules = 0
+        self.preemptions = 0
+        self.preempt_flag = False
+        self.state = _QUEUED
+        self.fail_reason = ""
+
+
+@dataclass
+class ClusterLease:
+    """An open-ended rank reservation for a serving tenant: the cluster
+    places it like a job and hands back a :class:`PimDecodePool` bound
+    to the ranks (see ``examples/serve_lm.py --cluster``)."""
+
+    tenant: str
+    ranks: Tuple[int, ...]
+    pool: object = None
+    active: bool = True
+
+
+class PimCluster:
+    """Admission + placement + SLO accounting over one shared system.
+
+    ``spare_ranks`` reserves the highest-numbered ranks out of normal
+    placement; only the ``fault_aware`` policy *promotes* them (into the
+    schedulable pool, fleet-wide, when a rank degrades below
+    ``health_floor`` and is retired) — under the other policies the
+    provisioned spares sit idle, which is exactly the comparison the
+    fault-tolerance study wants to price."""
+
+    def __init__(self, system, policy: str = "fault_aware", *,
+                 profiles="synthetic", health_floor: float = 0.5,
+                 spare_ranks: int = 0, preemption: bool = True,
+                 max_reschedules: int = 3, lm_tick_seconds: float = 1e-4,
+                 lm_min_fraction: float = 0.25,
+                 profile_scale: float = 0.05):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown placement policy {policy!r} "
+                             f"(want one of {POLICIES})")
+        n_ranks = system.topology.n_ranks
+        if not 0 <= spare_ranks < n_ranks:
+            raise ValueError(f"spare_ranks={spare_ranks} must leave at "
+                             f"least one schedulable rank of {n_ranks}")
+        self.system = system
+        self.topology = system.topology
+        self.policy = policy
+        self.health_floor = health_floor
+        self.preemption = preemption
+        self.max_reschedules = max_reschedules
+        self.lm_tick_seconds = lm_tick_seconds
+        self.lm_min_fraction = lm_min_fraction
+        self.profile_scale = profile_scale
+        self._profiles_arg = profiles
+        self.schedulable = set(range(n_ranks - spare_ranks))
+        self.spares: List[int] = list(range(n_ranks - spare_ranks, n_ranks))
+        self.retired: set = set()
+        self._owner: Dict[int, object] = {}     # rank -> _Run | ClusterLease
+        self.clock = 0.0
+        self._seq = 0
+        self._events: List[tuple] = []          # (time, seq, tag, jid)
+        self._runs: Dict[int, _Run] = {}
+        self._queue: List[_Run] = []
+        self.report = ClusterReport(policy=policy, n_ranks=n_ranks)
+        self._ran = False
+
+    # ---- profiles ----------------------------------------------------------
+    def _profile(self, kind: str) -> JobProfile:
+        if isinstance(self._profiles_arg, dict):
+            return self._profiles_arg[kind]
+        if self._profiles_arg == "synthetic":
+            self._profiles_arg = synthetic_profiles()
+            return self._profiles_arg[kind]
+        if self._profiles_arg == "measured":
+            self._profiles_arg = {
+                k: measure_profile(
+                    k, n_dpus=self.topology.dpus_per_rank,
+                    scale=self.profile_scale)
+                for k in ("BFS", "HST-S", "SSORT")}
+            return self._profiles_arg[kind]
+        raise ValueError(f"profiles must be 'synthetic', 'measured', or a "
+                         f"dict, got {self._profiles_arg!r}")
+
+    def _plan(self, spec: JobSpec) -> List[JobStep]:
+        if spec.kind == "lm_decode":
+            ticks = max(1, int(round(spec.size)))
+            return [JobStep("tick", label="decode")] * ticks
+        return self._profile(spec.kind).plan(spec.size)
+
+    # ---- health / placement ------------------------------------------------
+    def _rank_lanes(self, rank: int) -> List[int]:
+        sl = self.topology.dpu_slice(rank)
+        return list(range(*sl.indices(self.topology.n_dpus)))
+
+    def _healthy(self, rank: int) -> int:
+        return int(self.system.active_mask[self._rank_lanes(rank)].sum())
+
+    def _health_frac(self, rank: int) -> float:
+        per = self.topology.dpus_per_rank
+        return self._healthy(rank) / per if per else 0.0
+
+    def _refresh_health(self):
+        """fault_aware bookkeeping: retire ranks degraded below the
+        floor and promote a provisioned spare for each (fleet-wide —
+        the spare joins the general pool, not one tenant)."""
+        if self.policy != "fault_aware":
+            return
+        for r in sorted(self.schedulable):
+            if self._health_frac(r) < self.health_floor:
+                self.schedulable.discard(r)
+                self.retired.add(r)
+                while self.spares:
+                    s = self.spares.pop(0)
+                    if self._health_frac(s) >= self.health_floor:
+                        self.schedulable.add(s)
+                        break
+                    self.retired.add(s)
+
+    def _free_ranks(self, extra: Sequence[int] = ()) -> List[int]:
+        free = [r for r in self.schedulable if r not in self._owner]
+        return sorted(set(free) | set(extra))
+
+    def _place(self, n: int, extra: Sequence[int] = ()
+               ) -> Optional[Tuple[int, ...]]:
+        """Pick ``n`` free ranks under the policy (None: no placement).
+        ``extra`` dry-runs a preemption (the victim's ranks counted as
+        free)."""
+        free = self._free_ranks(extra)
+        if self.policy == "first_fit":
+            pick = free
+        elif self.policy == "best_fit":
+            pick = sorted(free, key=lambda r: (self._healthy(r), r))
+        else:  # fault_aware: healthiest first, floor-filtered
+            pick = sorted((r for r in free
+                           if self._health_frac(r) >= self.health_floor),
+                          key=lambda r: (-self._healthy(r), r))
+        if len(pick) < n:
+            return None
+        return tuple(sorted(pick[:n]))
+
+    def _capacity(self) -> int:
+        return len(self.schedulable) + (len(self.spares)
+                                        if self.policy == "fault_aware"
+                                        else 0)
+
+    # ---- event plumbing ----------------------------------------------------
+    def _push(self, t: float, tag: str, jid: int):
+        heapq.heappush(self._events, (t, self._seq, tag, jid))
+        self._seq += 1
+
+    def _charge(self, ranks: Sequence[int], seconds: float):
+        for r in ranks:
+            self.report.rank_busy[r] = \
+                self.report.rank_busy.get(r, 0.0) + seconds
+
+    # ---- job lifecycle -----------------------------------------------------
+    def _admit(self, run: _Run, t: float, ranks: Tuple[int, ...]):
+        run.ranks = ranks
+        run.lanes = [d for r in ranks for d in self._rank_lanes(r)]
+        run.state = _RUNNING
+        if run.t_start is None:
+            run.t_start = t
+        for r in ranks:
+            self._owner[r] = run
+        if run.spec.kind == "lm_decode":
+            from repro.serve.pim_pool import PimDecodePool
+            run.pool = PimDecodePool(
+                self.system, tick_seconds=self.lm_tick_seconds,
+                min_fraction=self.lm_min_fraction, ranks=list(ranks))
+        self.report.admissions.append((run.spec.jid, t, ranks))
+        self._start_step(run, t)
+
+    def _release(self, run: _Run):
+        for r in (run.ranks or ()):
+            if self._owner.get(r) is run:
+                del self._owner[r]
+        run.ranks = None
+        run.lanes = []
+        run.pool = None
+
+    def _finalize(self, run: _Run, t: float, status: str, reason: str = ""):
+        run.state = _DONE
+        run.t_done = t
+        run.fail_reason = reason
+        if status == COMPLETED:
+            run.useful = run.ideal_acc
+        ranks = tuple(run.ranks or ())
+        self._release(run)
+        s = run.spec
+        self.report.outcomes.append(JobOutcome(
+            jid=s.jid, tenant=s.tenant, kind=s.kind, priority=s.priority,
+            arrival=s.arrival, slo_seconds=s.slo_seconds, status=status,
+            t_start=run.t_start, t_done=t, spent=run.spent,
+            useful=run.useful, n_ranks=s.n_ranks, ranks=ranks,
+            reschedules=run.reschedules, preemptions=run.preemptions))
+
+    def _submit_step(self, run: _Run, step: JobStep, label: str):
+        """Charge one step to the shared system; returns ``(ideal,
+        clean)`` — the step's fault-free price and whether this
+        submission applied no degradation stretch.  Raises
+        :class:`DpuFaultError` when the job's ranks cannot serve it."""
+        system = self.system
+        if step.phase in ("h2d", "d2h"):
+            vec = np.zeros(self.topology.n_dpus)
+            vec[run.lanes] = step.bytes_per_dpu
+            ideal = self.topology.schedule(vec, step.phase).seconds
+            (system.h2d if step.phase == "h2d" else system.d2h)(
+                vec, label=f"{label}:{step.label or step.phase}")
+            return ideal, True
+        if step.phase == "kernel":
+            # degraded-subset stretch (the PR 6 decode-pool model): the
+            # survivors re-stream dead lanes' shards.  The mask is read
+            # before the launch; the launch itself advances permanent
+            # deaths and raises when no lane survives.
+            h = int(system.active_mask[run.lanes].sum())
+            stretch = len(run.lanes) / h if h else 1.0
+            system.modeled_launch(f"{label}:{step.label or 'kernel'}",
+                                  step.seconds * stretch, ranks=run.ranks)
+            return step.seconds, stretch == 1.0
+        if step.phase == "inter_dpu":
+            system.collective(f"{label}:{step.label or 'exchange'}",
+                              step.seconds, step.nbytes, ranks=run.ranks)
+            return step.seconds, True
+        if step.phase == "tick":
+            clean = run.pool.healthy_fraction == 1.0
+            run.pool.tick()
+            return run.pool.tick_seconds, clean
+        raise ValueError(f"unknown step phase {step.phase!r}")
+
+    def _start_step(self, run: _Run, t: float):
+        step = run.steps[run.next_step]
+        label = f"{run.spec.tenant}/j{run.spec.jid}"
+        timeline = self.system.timeline
+        before = timeline.total
+        retry0, nlog0 = timeline.retry, len(self.system.fault_log)
+        try:
+            with self.system.stream(f"tenant:{run.spec.tenant}"):
+                ideal, clean = self._submit_step(run, step, label)
+        except DpuFaultError as err:
+            delta = timeline.total - before
+            run.spent += delta
+            self._charge(run.ranks or (), delta)
+            self._fault(run, t + delta, err)
+            return
+        delta = timeline.total - before
+        run.spent += delta
+        # a clean step's ideal price IS what it charged — credit the
+        # measured delta so a fault-free run's goodput is exactly 1.0
+        # (crediting the analytic price would drift by accumulator
+        # rounding); any retry waste or logged fault voids the shortcut
+        clean = (clean and timeline.retry == retry0
+                 and len(self.system.fault_log) == nlog0)
+        run.ideal_acc += delta if clean else ideal
+        self._charge(run.ranks or (), delta)
+        self._push(t + delta, "step", run.spec.jid)
+
+    def _fault(self, run: _Run, t: float, err: DpuFaultError):
+        """A step could not be served (dead ranks, tripped pool floor,
+        exhausted retries).  fault_aware reschedules the replica —
+        ``lm_decode`` resumes its remaining ticks on fresh ranks, the
+        PrIM kinds restart (their staged data died with the ranks) —
+        everyone else fails the job and eats the wasted work."""
+        self.clock = max(self.clock, t)
+        self._release(run)
+        self._refresh_health()
+        if (self.policy == "fault_aware"
+                and run.reschedules < self.max_reschedules):
+            run.reschedules += 1
+            if run.spec.kind != "lm_decode":
+                run.next_step = 0
+                run.ideal_acc = 0.0
+            run.state = _QUEUED
+            self._queue.append(run)
+        else:
+            self._finalize(run, t, FAILED, reason=err.report.kind)
+        self._try_admit(t)
+
+    def _step_done(self, run: _Run, t: float):
+        run.next_step += 1
+        if run.next_step >= len(run.steps):
+            self._finalize(run, t, COMPLETED)
+            self._try_admit(t)
+            return
+        if run.preempt_flag:
+            # kernel-launch-boundary preemption: yield the ranks to the
+            # armed higher-priority job and requeue with progress kept
+            run.preempt_flag = False
+            run.preemptions += 1
+            self._release(run)
+            run.state = _QUEUED
+            self._queue.append(run)
+            self._try_admit(t)
+            return
+        self._start_step(run, t)
+
+    # ---- admission ---------------------------------------------------------
+    def _try_admit(self, t: float):
+        self._refresh_health()
+        # strict priority, FIFO within a class, backfill past stuck heads
+        self._queue.sort(key=lambda r: (-r.spec.priority, r.spec.arrival,
+                                        r.spec.jid))
+        admitted = True
+        while admitted:
+            admitted = False
+            for run in list(self._queue):
+                if run.spec.n_ranks > self._capacity():
+                    self._queue.remove(run)
+                    self._finalize(run, t, FAILED, reason="unplaceable")
+                    admitted = True
+                    break
+                ranks = self._place(run.spec.n_ranks)
+                if ranks is not None:
+                    self._queue.remove(run)
+                    self._admit(run, t, ranks)
+                    admitted = True
+                    break
+        if self.preemption and self._queue:
+            head = self._queue[0]
+            victims = [r for r in self._runs.values()
+                       if r.state == _RUNNING and not r.preempt_flag
+                       and r.spec.priority < head.spec.priority]
+            # lowest-priority, youngest victim whose ranks would make
+            # the head job placeable (exact dry-run, so preemption is
+            # never armed in vain)
+            for v in sorted(victims, key=lambda r: (r.spec.priority,
+                                                    -r.spec.jid)):
+                if self._place(head.spec.n_ranks, extra=v.ranks or ()):
+                    v.preempt_flag = True
+                    break
+
+    # ---- run ---------------------------------------------------------------
+    def run(self, jobs: Sequence[JobSpec]) -> ClusterReport:
+        """Simulate the whole stream; one call per cluster instance."""
+        if self._ran:
+            raise RuntimeError("PimCluster.run is single-shot: build a "
+                               "fresh cluster (and system) per run")
+        self._ran = True
+        for spec in sorted(jobs, key=lambda s: (s.arrival, s.jid)):
+            run = _Run(spec, self._plan(spec))
+            self._runs[spec.jid] = run
+            self._push(spec.arrival, "arrive", spec.jid)
+        while self._events:
+            t, _, tag, jid = heapq.heappop(self._events)
+            self.clock = max(self.clock, t)
+            run = self._runs[jid]
+            if tag == "arrive":
+                self._queue.append(run)
+                self._try_admit(t)
+            elif run.state == _RUNNING:
+                self._step_done(run, t)
+        # capacity died under the queue: nothing running, no events left
+        for run in list(self._queue):
+            self._queue.remove(run)
+            self._finalize(run, self.clock, FAILED, reason="no_capacity")
+        self.report.makespan = self.clock
+        self.report.outcomes.sort(key=lambda o: o.jid)
+        return self.report
+
+    # ---- serving leases ----------------------------------------------------
+    def lease(self, tenant: str, n_ranks: int = 1, *,
+              tick_seconds: Optional[float] = None,
+              min_fraction: Optional[float] = None) -> ClusterLease:
+        """Admit an open-ended serving tenant NOW: place ``n_ranks``
+        under the policy and return a lease whose ``pool`` is a
+        :class:`PimDecodePool` bound to those ranks.  Raises
+        :class:`DpuFaultError` (kind ``no_capacity``) when placement
+        fails — serving replicas are not queued."""
+        from repro.serve.pim_pool import PimDecodePool
+        self._refresh_health()
+        ranks = self._place(n_ranks)
+        if ranks is None:
+            raise DpuFaultError(FaultReport(
+                kind="no_capacity", label=tenant,
+                detail=f"no {n_ranks}-rank placement available "
+                       f"(policy={self.policy})"))
+        lease = ClusterLease(tenant=tenant, ranks=ranks)
+        lease.pool = PimDecodePool(
+            self.system,
+            tick_seconds=(tick_seconds if tick_seconds is not None
+                          else self.lm_tick_seconds),
+            min_fraction=(min_fraction if min_fraction is not None
+                          else self.lm_min_fraction),
+            ranks=list(ranks))
+        for r in ranks:
+            self._owner[r] = lease
+        self.report.admissions.append((f"lease:{tenant}", self.clock, ranks))
+        return lease
+
+    def release(self, lease: ClusterLease):
+        for r in lease.ranks:
+            if self._owner.get(r) is lease:
+                del self._owner[r]
+        lease.active = False
+
+    def relocate(self, lease: ClusterLease) -> ClusterLease:
+        """Reschedule a serving replica whose pool tripped its floor:
+        release the degraded ranks and lease fresh ones (fault_aware
+        placement naturally lands on healthy ranks)."""
+        tick = lease.pool.tick_seconds if lease.pool is not None else None
+        frac = lease.pool.min_fraction if lease.pool is not None else None
+        self.release(lease)
+        return self.lease(lease.tenant, len(lease.ranks),
+                          tick_seconds=tick, min_fraction=frac)

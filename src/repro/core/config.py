@@ -60,7 +60,15 @@ class DPUConfig:
     # physical channel (or fabric) overlap; a factor > 1 stretches the
     # later arrival while they share the link.  1.0 = independent
     # per-rank shares (and reproduces the PR 3 whole-system timelines).
-    channel_contention: float = 1.0
+    # Default calibrated against the measured multi-rank weak scaling of
+    # Gomez-Luna et al. (arXiv:2110.01709): two ranks driving one memory
+    # channel concurrently sustain ~1.2x the single-rank aggregate
+    # bandwidth, not 2x — the host AVX copy threads contend on the
+    # channel bus.  The model's aggregate speedup for R concurrent
+    # same-channel ranks is R/factor, so factor = 2/1.2 ~= 1.67 hits the
+    # measured point (benchmarks/rank_overlap.py contention_calibration()
+    # re-derives it; tests pin the value).
+    channel_contention: float = 1.67
 
     # ----- inter-DPU fabric (pathfinding case study) --------------------------
     # "host": DPU->CPU->DPU bounce (today's hardware, §II-B)

@@ -41,8 +41,21 @@ class PimDecodePool:
 
     @property
     def healthy_fraction(self) -> float:
-        total = self.system.cfg.n_dpus
-        return float(self.system.active_mask.sum()) / total if total else 0.0
+        """Surviving fraction of the pool's *own* lanes: a lease on a
+        rank subset is priced (and floored) by the health of those
+        ranks, not of the whole fleet — deaths elsewhere neither slow
+        this pool nor trip its floor."""
+        mask = self.system.active_mask
+        if self.ranks is None:
+            total = mask.size
+            healthy = int(mask.sum())
+        else:
+            topo = self.system.topology
+            lanes = [d for r in self.ranks
+                     for d in range(*topo.dpu_slice(r).indices(mask.size))]
+            total = len(lanes)
+            healthy = int(mask[lanes].sum())
+        return healthy / total if total else 0.0
 
     def tick(self, n_active: int = 1) -> float:
         """Charge one pool-wide decode tick; returns the modeled seconds.

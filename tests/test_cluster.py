@@ -1,0 +1,300 @@
+"""repro.cluster: seeded arrival determinism, admission/placement
+policies, preemption, fault-driven rescheduling, and SLO metrics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (COMPLETED, FAILED, JobSpec, PimCluster,
+                           TenantSpec, poisson_stream, save_trace,
+                           synthetic_profiles, trace_stream)
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.faults.model import FaultPlan, kill_dpu
+
+
+def _sys(D=32, ranks=8, chans=4, mode="async", faults=None):
+    return PIMSystem(DPUConfig(n_dpus=D, n_ranks=ranks, n_channels=chans,
+                               mram_bytes=1 << 20),
+                     mode=mode, faults=faults)
+
+
+def _tenants():
+    return [
+        TenantSpec("graph", rate_hz=400.0, kinds=("BFS",), n_ranks=2,
+                   priority=1, slo_seconds=0.05),
+        TenantSpec("sort", rate_hz=300.0, kinds=("SSORT", "HST-S")),
+        TenantSpec("lm", rate_hz=200.0, kinds=("lm_decode",), size=6,
+                   n_ranks=2, priority=2, slo_seconds=0.02),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# arrivals
+# ---------------------------------------------------------------------------
+
+def test_poisson_stream_seeded_determinism():
+    a = poisson_stream(_tenants(), horizon=0.05, seed=11)
+    b = poisson_stream(_tenants(), horizon=0.05, seed=11)
+    assert a == b
+    c = poisson_stream(_tenants(), horizon=0.05, seed=12)
+    assert a != c
+    # jid order == arrival order, the admission-queue invariant
+    assert [j.jid for j in a] == list(range(len(a)))
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+
+
+def test_poisson_stream_per_tenant_streams_independent():
+    # adding a tenant must not perturb the existing tenants' draws
+    base = poisson_stream(_tenants()[:2], horizon=0.05, seed=3)
+    more = poisson_stream(_tenants(), horizon=0.05, seed=3)
+    def key(js):
+        return sorted((j.tenant, j.arrival, j.kind, j.size) for j in js)
+    assert key(j for j in more if j.tenant != "lm") == key(base)
+
+
+def test_trace_roundtrip(tmp_path):
+    jobs = poisson_stream(_tenants(), horizon=0.03, seed=5)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, jobs)
+    assert trace_stream(path) == jobs
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        JobSpec(jid=0, tenant="t", kind="NOPE", arrival=0.0)
+    with pytest.raises(ValueError):
+        JobSpec(jid=0, tenant="t", kind="BFS", arrival=0.0, size=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("t", rate_hz=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("t", rate_hz=1.0, kinds=("BFS",), kind_weights=(1.0, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# determinism of the full cluster run
+# ---------------------------------------------------------------------------
+
+def _report(mode, faults=None, policy="fault_aware", jobs=None):
+    jobs = jobs if jobs is not None else poisson_stream(
+        _tenants(), horizon=0.05, seed=7)
+    return PimCluster(_sys(mode=mode, faults=faults), policy=policy,
+                      spare_ranks=2).run(jobs)
+
+
+def _assert_identical(r1, r2):
+    assert r1.admissions == r2.admissions      # same order, same placements
+    assert r1.outcomes == r2.outcomes          # bit-identical metrics inputs
+    assert r1.rank_busy == r2.rank_busy
+    assert r1.makespan == r2.makespan
+    assert r1.metrics() == r2.metrics()
+
+
+def test_bit_deterministic_across_repeats():
+    _assert_identical(_report("async"), _report("async"))
+
+
+def test_bit_deterministic_across_inorder_and_async():
+    # the cluster clock derives from the eager timeline sums, never from
+    # the overlapped schedule, so the execution mode cannot leak in
+    _assert_identical(_report("inorder"), _report("async"))
+
+
+def test_bit_deterministic_under_faults_across_modes():
+    mk = lambda: FaultPlan(seed=3, p_dpu_permanent=0.02)
+    _assert_identical(_report("inorder", faults=mk()),
+                      _report("async", faults=mk()))
+
+
+# ---------------------------------------------------------------------------
+# fault-free behaviour
+# ---------------------------------------------------------------------------
+
+def test_fault_free_all_complete_goodput_exactly_one():
+    for policy in ("first_fit", "best_fit", "fault_aware"):
+        rep = _report("async", policy=policy)
+        m = rep.metrics()
+        assert m["failed"] == 0 and m["completed"] == m["jobs"]
+        assert rep.goodput() == 1.0            # exact, not approx
+        assert math.isfinite(m["p99_latency"])
+        assert 0.0 < rep.utilization() <= 1.0
+
+
+def test_latency_decomposition_and_slo():
+    rep = _report("async")
+    for o in rep.outcomes:
+        assert o.status == COMPLETED
+        assert o.latency >= o.queueing >= 0.0
+        assert o.slo_met == (o.latency <= o.slo_seconds)
+    # lm (priority 2) jumps the queue: its mean queueing is no worse
+    # than the batch tenant's
+    m = {t: rep.metrics(t) for t in rep.tenants()}
+    assert m["lm"]["mean_queueing"] <= m["sort"]["mean_queueing"] + 1e-12
+
+
+def test_first_fit_picks_lowest_free_ranks():
+    jobs = [JobSpec(jid=0, tenant="a", kind="BFS", arrival=0.0, n_ranks=2),
+            JobSpec(jid=1, tenant="b", kind="BFS", arrival=0.0, n_ranks=3)]
+    rep = PimCluster(_sys(), policy="first_fit").run(jobs)
+    placed = {jid: ranks for jid, _, ranks in rep.admissions}
+    assert placed[0] == (0, 1) and placed[1] == (2, 3, 4)
+
+
+def test_unplaceable_job_fails_not_hangs():
+    jobs = [JobSpec(jid=0, tenant="a", kind="BFS", arrival=0.0, n_ranks=99)]
+    rep = PimCluster(_sys(), policy="first_fit").run(jobs)
+    assert rep.outcomes[0].status == FAILED
+    assert rep.outcomes[0].t_start is None
+
+
+def test_preemption_at_step_boundary():
+    # a low-priority hog owns the whole fleet when an urgent job lands
+    jobs = [JobSpec(jid=0, tenant="batch", kind="SSORT", arrival=0.0,
+                    size=4.0, n_ranks=8, priority=0),
+            JobSpec(jid=1, tenant="urgent", kind="HST-S", arrival=1e-4,
+                    n_ranks=4, priority=5)]
+    rep = PimCluster(_sys(), policy="first_fit").run(jobs)
+    by = {o.jid: o for o in rep.outcomes}
+    assert by[0].preemptions >= 1
+    assert by[1].status == COMPLETED and by[0].status == COMPLETED
+    assert by[1].t_done < by[0].t_done         # urgent finished first
+    rep2 = PimCluster(_sys(), policy="first_fit", preemption=False).run(jobs)
+    by2 = {o.jid: o for o in rep2.outcomes}
+    assert by2[0].preemptions == 0
+    assert by2[1].t_done > by[1].t_done        # urgent waited for the hog
+
+
+# ---------------------------------------------------------------------------
+# faults: rescheduling, spares, policy comparison
+# ---------------------------------------------------------------------------
+
+def _rank0_kill_plan(D=16, ranks=4, at_launch=2):
+    per = D // ranks
+    return FaultPlan(events=tuple(kill_dpu(d, at_launch)
+                                  for d in range(per)))
+
+
+def test_fault_aware_reschedules_lm_replica():
+    jobs = [JobSpec(jid=0, tenant="lm", kind="lm_decode", arrival=0.0,
+                    size=6, n_ranks=1)]
+    sysf = _sys(D=16, ranks=4, chans=2, faults=_rank0_kill_plan())
+    rep = PimCluster(sysf, policy="fault_aware").run(jobs)
+    o = rep.outcomes[0]
+    assert o.status == COMPLETED and o.reschedules == 1
+    assert 0 not in o.ranks                    # moved off the dead rank
+    # first_fit has no reschedule path: the same plan kills the job
+    sysf = _sys(D=16, ranks=4, chans=2, faults=_rank0_kill_plan())
+    rep = PimCluster(sysf, policy="first_fit").run(jobs)
+    assert rep.outcomes[0].status == FAILED
+
+
+def test_fault_aware_placement_skips_degraded_rank():
+    # rank 0 loses half its DPUs before any job arrives (launch 0 is the
+    # probe kernel of the first admitted job)
+    sysf = _sys(D=16, ranks=4, chans=2,
+                faults=_rank0_kill_plan(at_launch=0))
+    jobs = [JobSpec(jid=0, tenant="a", kind="HST-S", arrival=0.0),
+            JobSpec(jid=1, tenant="a", kind="HST-S", arrival=1e-3)]
+    rep = PimCluster(sysf, policy="fault_aware").run(jobs)
+    # the first job eats the deaths mid-run; the later one must avoid
+    # the now-degraded rank 0 entirely
+    assert all(0 not in ranks for jid, _, ranks in rep.admissions
+               if jid == 1)
+
+
+def test_spare_promotion_only_under_fault_aware():
+    # 4 schedulable + 1 spare; rank 0 dies -> fault_aware backfills the
+    # spare, first_fit leaves it idle
+    D, ranks = 20, 5
+    plan = lambda: FaultPlan(events=tuple(kill_dpu(d, 0) for d in range(4)))
+    # all six jobs land at once so the fleet needs every live rank
+    jobs = [JobSpec(jid=j, tenant="a", kind="HST-S", arrival=0.0)
+            for j in range(6)]
+    fa = PimCluster(_sys(D=D, ranks=ranks, faults=plan()),
+                    policy="fault_aware", spare_ranks=1).run(jobs)
+    assert any(4 in ranks for _, _, ranks in fa.admissions)
+    ff = PimCluster(_sys(D=D, ranks=ranks, faults=plan()),
+                    policy="first_fit", spare_ranks=1).run(jobs)
+    assert all(4 not in ranks for _, _, ranks in ff.admissions)
+
+
+def test_fault_aware_beats_first_fit_goodput_at_2pct():
+    mk = lambda: FaultPlan(seed=1, p_dpu_permanent=0.02)
+    jobs = poisson_stream(_tenants(), horizon=0.08, seed=7)
+    fa = PimCluster(_sys(faults=mk()), policy="fault_aware",
+                    spare_ranks=2).run(jobs)
+    ff = PimCluster(_sys(faults=mk()), policy="first_fit",
+                    spare_ranks=2).run(jobs)
+    assert fa.goodput() > ff.goodput()
+    assert fa.goodput() < 1.0                  # faults really fired
+
+
+def test_goodput_counts_failed_jobs_work():
+    # a failed job's spent seconds stay in the denominator
+    sysf = _sys(D=16, ranks=4, chans=2, faults=_rank0_kill_plan())
+    jobs = [JobSpec(jid=0, tenant="lm", kind="lm_decode", arrival=0.0,
+                    size=6, n_ranks=1)]
+    rep = PimCluster(sysf, policy="first_fit").run(jobs)
+    o = rep.outcomes[0]
+    assert o.status == FAILED and o.spent > 0.0 and o.useful == 0.0
+    assert rep.goodput() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving leases
+# ---------------------------------------------------------------------------
+
+def test_lease_release_relocate():
+    from repro.faults.model import DpuFaultError
+    cluster = PimCluster(_sys(D=16, ranks=4, chans=2), policy="fault_aware")
+    lease = cluster.lease("svc", n_ranks=2)
+    assert lease.ranks == (0, 1) and lease.pool.ranks == [0, 1]
+    lease.pool.tick()                          # charges the shared system
+    assert cluster.system.timeline.kernel > 0.0
+    moved = cluster.relocate(lease)
+    assert not lease.active and moved.active
+    assert set(moved.ranks).isdisjoint({})     # placed somewhere valid
+    cluster.release(moved)
+    # all four ranks free again: a 4-rank lease now fits
+    wide = cluster.lease("svc", n_ranks=4)
+    assert wide.ranks == (0, 1, 2, 3)
+    cluster.release(wide)
+    with pytest.raises(DpuFaultError):
+        cluster.lease("svc", n_ranks=5)        # beyond capacity
+
+
+def test_pool_healthy_fraction_is_subset_scoped():
+    # deaths OUTSIDE the pool's ranks must not degrade or floor it
+    from repro.serve.pim_pool import PimDecodePool
+    s = _sys(D=16, ranks=4, chans=2)
+    s.active_mask[8:] = False                  # ranks 2,3 fully dead
+    pool = PimDecodePool(s, ranks=[0, 1])
+    assert pool.healthy_fraction == 1.0
+    fleet = PimDecodePool(s)
+    assert fleet.healthy_fraction == 0.5
+    s.active_mask[0:2] = False                 # 2 of the pool's 8 lanes
+    assert pool.healthy_fraction == 0.75
+
+
+# ---------------------------------------------------------------------------
+# misc API guards
+# ---------------------------------------------------------------------------
+
+def test_cluster_run_is_single_shot():
+    cluster = PimCluster(_sys(), policy="first_fit")
+    cluster.run([])
+    with pytest.raises(RuntimeError):
+        cluster.run([])
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        PimCluster(_sys(), policy="round_robin")
+
+
+def test_synthetic_profiles_cover_prim_kinds():
+    profs = synthetic_profiles()
+    assert set(profs) == {"BFS", "HST-S", "SSORT"}
+    for p in profs.values():
+        assert p.steps and p.plan(2.0)[0].bytes_per_dpu \
+            == 2.0 * p.steps[0].bytes_per_dpu
