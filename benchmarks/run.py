@@ -9,13 +9,24 @@ availability/goodput, ``cluster`` multi-tenant cluster runtime,
 ``all``); ``--only`` further filters by substring — a filter matching
 nothing is an error listing the valid bench names, not a silent no-op.
 
+``--trace PATH`` runs the selected benches under a process-wide
+:class:`repro.obs.Tracer` (every :class:`PIMSystem` any suite builds
+attaches automatically) and writes the combined Chrome-trace JSON to
+PATH plus a ``RunProfile`` counters snapshot next to it
+(``<PATH minus .json>.counters.json``) — open the trace in
+``ui.perfetto.dev``, render the counters with ``python -m
+repro.obs.report``.  ``--check`` (requires ``--trace``) gates on
+trace/timeline consistency: every system's per-phase span sums must
+match its timeline busy totals, or the run exits nonzero.
+
     PYTHONPATH=src python -m benchmarks.run [--scale 0.05] \\
-        [--suite comm] [--only fig11]
+        [--suite comm] [--only fig11] [--trace run.trace.json] [--check]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 #: suite families selectable via --suite (benches declare theirs inline)
@@ -34,7 +45,24 @@ def main() -> None:
                     choices=("all",) + SUITE_NAMES)
     ap.add_argument("--only", default=None)
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run to PATH "
+                         "(plus a RunProfile counters snapshot next to it)")
+    ap.add_argument("--check", action="store_true",
+                    help="with --trace: fail unless every system's "
+                         "per-phase span sums match its timeline totals")
     args = ap.parse_args()
+    if args.check and not args.trace:
+        ap.error("--check requires --trace")
+
+    tracer = profile = None
+    if args.trace:
+        from repro import obs
+        tracer = obs.Tracer()
+        obs.set_default_tracer(tracer)
+        # construct before the benches run: the compile-cache baseline is
+        # taken here, so the snapshot reports this run's delta
+        profile = obs.RunProfile(name=f"bench:{args.suite}")
 
     from benchmarks import cluster_load, comm_scaling, fault_tolerance, \
         lm_roofline, overlap_scaling, pim_figs, rank_overlap
@@ -98,6 +126,22 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             rows = [{"error": f"{type(e).__name__}: {e}"}]
         _emit(name, time.time() - t0, rows)
+
+    if tracer is not None:
+        tracer.finalize()
+        tracer.save(args.trace)
+        for system in tracer.systems:
+            profile.record_system(system)
+        profile.record_compile_cache()
+        counters_path = os.path.splitext(args.trace)[0] + ".counters.json"
+        profile.save(counters_path)
+        print(f"# trace: {args.trace}  counters: {counters_path}")
+        if args.check:
+            errors = tracer.validate()
+            if errors:
+                raise SystemExit("trace/timeline mismatch:\n"
+                                 + "\n".join(errors))
+            print(f"# check: OK ({len(tracer.systems)} systems consistent)")
 
 
 if __name__ == "__main__":

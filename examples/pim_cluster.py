@@ -10,7 +10,14 @@ on degraded ranks (each kernel stretches as survivors re-stream dead
 lanes' shards) while the fault-aware policy retires sick ranks, promotes
 the provisioned spares, and reschedules replicas.
 
-    PYTHONPATH=src python examples/pim_cluster.py [--rate 0.02] [--trace f]
+    PYTHONPATH=src python examples/pim_cluster.py [--rate 0.02] [--trace f] \\
+        [--chrome-trace cluster.trace.json]
+
+``--chrome-trace PATH`` records every run (all four rate x policy
+combinations) into one :class:`repro.obs.Tracer` and writes the
+Chrome-trace JSON to PATH — open it at ``ui.perfetto.dev`` to see the
+per-rank lanes, whole-job async spans per tenant, and fault/preemption/
+spare-promotion instants.
 """
 import argparse
 import os
@@ -23,13 +30,14 @@ from repro.cluster import (PimCluster, TenantSpec, poisson_stream,
 from repro.core.config import DPUConfig
 from repro.core.host import PIMSystem
 from repro.faults.model import FaultPlan
+from repro.obs import Tracer
 
 
-def _system(rate: float) -> PIMSystem:
+def _system(rate: float, tracer=None) -> PIMSystem:
     faults = FaultPlan(seed=1, p_dpu_permanent=rate) if rate > 0 else None
     return PIMSystem(DPUConfig(n_dpus=32, n_ranks=8, n_channels=4,
                                mram_bytes=1 << 20),
-                     mode="async", faults=faults)
+                     mode="async", faults=faults, tracer=tracer)
 
 
 def main():
@@ -41,7 +49,11 @@ def main():
     ap.add_argument("--trace", default=None,
                     help="save the sampled stream as a JSONL trace and "
                          "replay it from the file (record/replay demo)")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="export all runs as Chrome-trace JSON to PATH "
+                         "(open in ui.perfetto.dev)")
     args = ap.parse_args()
+    tracer = Tracer() if args.chrome_trace else None
 
     tenants = [
         TenantSpec("graph", rate_hz=400.0, kinds=("BFS",), n_ranks=2,
@@ -59,10 +71,17 @@ def main():
 
     for rate in (0.0, args.rate):
         for policy in ("first_fit", "fault_aware"):
-            rep = PimCluster(_system(rate), policy=policy,
+            rep = PimCluster(_system(rate, tracer), policy=policy,
                              spare_ranks=2).run(jobs)
             print(f"\n=== fault rate {rate:.0%}  policy {policy} ===")
             print(rep.table())
+
+    if tracer is not None:
+        tracer.finalize()
+        tracer.save(args.chrome_trace)
+        print(f"\nChrome trace: {args.chrome_trace} "
+              f"({len(tracer.spans())} spans, "
+              f"{len(tracer.instants())} instants)")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ import numpy as np
 from repro.cluster.arrivals import JobSpec
 from repro.cluster.metrics import COMPLETED, FAILED, ClusterReport, JobOutcome
 from repro.faults.model import DpuFaultError, FaultReport
+from repro.obs.tracer import PID_CLUSTER, Tracer
 
 POLICIES = ("first_fit", "best_fit", "fault_aware")
 
@@ -218,7 +219,8 @@ class PimCluster:
                  spare_ranks: int = 0, preemption: bool = True,
                  max_reschedules: int = 3, lm_tick_seconds: float = 1e-4,
                  lm_min_fraction: float = 0.25,
-                 profile_scale: float = 0.05):
+                 profile_scale: float = 0.05,
+                 tracer: Optional[Tracer] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown placement policy {policy!r} "
                              f"(want one of {POLICIES})")
@@ -247,6 +249,31 @@ class PimCluster:
         self._queue: List[_Run] = []
         self.report = ClusterReport(policy=policy, n_ranks=n_ranks)
         self._ran = False
+        # observability: explicit tracer, else the shared system's (the
+        # cluster view lands in the same export as the schedule spans,
+        # on its own event-clock pid)
+        self.tracer = tracer if tracer is not None \
+            else getattr(system, "tracer", None)
+
+    # ---- observability -----------------------------------------------------
+    @property
+    def trace(self) -> dict:
+        """The run's Chrome-trace-event JSON (Perfetto-ready): cluster
+        job spans per tenant lane, per-rank occupancy slices, and
+        admission/preemption/fault/spare-promotion instants — plus, when
+        the tracer is shared with the system (the default), the
+        overlapped schedule's per-resource spans.  Requires tracing to
+        be enabled (``tracer=`` here or on the system)."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is disabled: build the cluster (or its system) "
+                "with tracer=repro.obs.Tracer() to export a trace")
+        return self.tracer.to_chrome_trace()
+
+    def _instant(self, name: str, t: float, **args):
+        if self.tracer is not None:
+            self.tracer.instant(name, t, track="cluster", pid=PID_CLUSTER,
+                                args=args)
 
     # ---- profiles ----------------------------------------------------------
     def _profile(self, kind: str) -> JobProfile:
@@ -293,10 +320,14 @@ class PimCluster:
             if self._health_frac(r) < self.health_floor:
                 self.schedulable.discard(r)
                 self.retired.add(r)
+                self._instant("rank:retired", self.clock, rank=r,
+                              health=self._health_frac(r))
                 while self.spares:
                     s = self.spares.pop(0)
                     if self._health_frac(s) >= self.health_floor:
                         self.schedulable.add(s)
+                        self._instant("spare:promoted", self.clock,
+                                      rank=s, replacing=r)
                         break
                     self.retired.add(s)
 
@@ -352,6 +383,9 @@ class PimCluster:
                 self.system, tick_seconds=self.lm_tick_seconds,
                 min_fraction=self.lm_min_fraction, ranks=list(ranks))
         self.report.admissions.append((run.spec.jid, t, ranks))
+        self._instant("job:admit", t, jid=run.spec.jid,
+                      tenant=run.spec.tenant, kind=run.spec.kind,
+                      ranks=list(ranks))
         self._start_step(run, t)
 
     def _release(self, run: _Run):
@@ -377,6 +411,20 @@ class PimCluster:
             t_start=run.t_start, t_done=t, spent=run.spent,
             useful=run.useful, n_ranks=s.n_ranks, ranks=ranks,
             reschedules=run.reschedules, preemptions=run.preemptions))
+        if self.tracer is not None:
+            # whole-job span on the tenant's lane: arrival -> terminal;
+            # async (b/e) export so concurrent jobs of one tenant nest
+            self.tracer.span(
+                f"{s.tenant}/j{s.jid}:{s.kind}", s.arrival, t,
+                (f"tenant:{s.tenant}",), pid=PID_CLUSTER,
+                async_id=s.jid,
+                args={"status": status, "reason": run.fail_reason,
+                      "spent_s": run.spent, "ranks": list(ranks),
+                      "reschedules": run.reschedules,
+                      "preemptions": run.preemptions})
+            if status == FAILED:
+                self._instant("job:failed", t, jid=s.jid,
+                              tenant=s.tenant, reason=run.fail_reason)
 
     def _submit_step(self, run: _Run, step: JobStep, label: str):
         """Charge one step to the shared system; returns ``(ideal,
@@ -436,6 +484,15 @@ class PimCluster:
                  and len(self.system.fault_log) == nlog0)
         run.ideal_acc += delta if clean else ideal
         self._charge(run.ranks or (), delta)
+        if self.tracer is not None and delta > 0.0:
+            # rank-occupancy slices on the cluster event clock: every
+            # rank the job holds shows this step busy for its duration
+            self.tracer.span(
+                f"{label}:{step.label or step.phase}", t, t + delta,
+                tuple(f"rank{r}" for r in (run.ranks or ())),
+                pid=PID_CLUSTER, phase=step.phase,
+                args={"tenant": run.spec.tenant, "jid": run.spec.jid,
+                      "clean": clean})
         self._push(t + delta, "step", run.spec.jid)
 
     def _fault(self, run: _Run, t: float, err: DpuFaultError):
@@ -445,6 +502,8 @@ class PimCluster:
         PrIM kinds restart (their staged data died with the ranks) —
         everyone else fails the job and eats the wasted work."""
         self.clock = max(self.clock, t)
+        self._instant("job:fault", t, jid=run.spec.jid,
+                      tenant=run.spec.tenant, kind=err.report.kind)
         self._release(run)
         self._refresh_health()
         if (self.policy == "fault_aware"
@@ -470,6 +529,9 @@ class PimCluster:
             # armed higher-priority job and requeue with progress kept
             run.preempt_flag = False
             run.preemptions += 1
+            self._instant("job:preempted", t, jid=run.spec.jid,
+                          tenant=run.spec.tenant,
+                          ranks=list(run.ranks or ()))
             self._release(run)
             run.state = _QUEUED
             self._queue.append(run)
@@ -568,6 +630,8 @@ class PimCluster:
         for r in ranks:
             self._owner[r] = lease
         self.report.admissions.append((f"lease:{tenant}", self.clock, ranks))
+        self._instant("lease:placed", self.clock, tenant=tenant,
+                      ranks=list(ranks))
         return lease
 
     def release(self, lease: ClusterLease):

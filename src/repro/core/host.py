@@ -34,6 +34,8 @@ from repro.core.config import DPUConfig
 from repro.core.isa import Binary
 from repro.faults.model import DpuFaultError, FaultPlan, FaultReport
 from repro.faults.retry import DEFAULT_POLICY, RetryPolicy
+from repro.obs import get_default_tracer
+from repro.obs.tracer import PID_HOST, Tracer
 from repro.sched import queue as sq
 from repro.sched import scheduler as ssched
 
@@ -58,13 +60,20 @@ class Timeline:
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
     #: overlapped makespan from the repro.sched scheduler (None = not synced)
     elapsed: Optional[float] = None
+    #: (phase, label) -> seconds, maintained by add() so by_label() is
+    #: O(distinct labels) instead of rescanning every event per call
+    _label_sums: Dict[Tuple[str, str], float] = field(
+        default_factory=dict, repr=False)
 
     def add(self, phase: str, seconds: float, label: str = "",
             nbytes: float = 0.0):
         if phase not in PHASES:
             raise ValueError(f"unknown phase {phase!r}")
         setattr(self, phase, getattr(self, phase) + seconds)
-        self.events.append((phase, label or phase, seconds, nbytes))
+        lbl = label or phase
+        self.events.append((phase, lbl, seconds, nbytes))
+        key = (phase, lbl)
+        self._label_sums[key] = self._label_sums.get(key, 0.0) + seconds
 
     @property
     def total(self) -> float:
@@ -93,11 +102,14 @@ class Timeline:
                 "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t,
                 "retry": self.retry / t}
 
-    def by_label(self, phase: str) -> Dict[str, float]:
-        """Seconds per event label within one phase (e.g. per-collective)."""
+    def by_label(self, phase: Optional[str] = None) -> Dict[str, float]:
+        """Seconds per event label within one phase (e.g. per-collective),
+        or — with ``phase=None`` — aggregated across *all* phases (a
+        label charged in several phases sums once per label).  Served
+        from the ``add()``-time index, not an event rescan."""
         out: Dict[str, float] = {}
-        for ph, label, sec, _ in self.events:
-            if ph == phase:
+        for (ph, label), sec in self._label_sums.items():
+            if phase is None or ph == phase:
                 out[label] = out.get(label, 0.0) + sec
         return out
 
@@ -113,16 +125,28 @@ class PIMSystem:
     backoff).  ``recovery`` is the launch-failure policy workloads
     consult: ``"remap"`` re-executes lost shards on survivors,
     ``"raise"`` is fail-stop.  ``ckpt_dir`` enables checkpointed
-    re-execution (``repro.ckpt.store``) of remapped shards."""
+    re-execution (``repro.ckpt.store``) of remapped shards.
+
+    ``tracer`` installs a :class:`repro.obs.Tracer`: :meth:`sync` feeds
+    it the overlapped schedule's spans, and fault/retry occurrences are
+    emitted as instant events on the eager clock.  The default (None,
+    unless a process-wide tracer was installed via
+    ``repro.obs.set_default_tracer``) is zero-cost: every emission site
+    is guarded, and an enabled tracer never feeds back into the
+    simulation — timelines and results stay bit-exact either way."""
 
     def __init__(self, cfg: DPUConfig, fabric: Optional[Fabric] = None,
                  mode: str = "inorder", faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
-                 recovery: str = "remap", ckpt_dir: Optional[str] = None):
+                 recovery: str = "remap", ckpt_dir: Optional[str] = None,
+                 tracer: Optional[Tracer] = None):
         if recovery not in ("remap", "raise"):
             raise ValueError(f"unknown recovery policy {recovery!r} "
                              "(want remap|raise)")
         self.cfg = cfg
+        self.tracer = tracer if tracer is not None else get_default_tracer()
+        if self.tracer is not None:
+            self.tracer.attach_system(self)
         self.topology = RankTopology.from_config(cfg)
         self.fabric = fabric or make_fabric(cfg, self.topology)
         self.timeline = Timeline()
@@ -146,12 +170,25 @@ class PIMSystem:
         """Sorted ids of currently healthy DPUs."""
         return [int(d) for d in np.flatnonzero(self.active_mask)]
 
+    def _log_fault(self, report: FaultReport):
+        """Record one fault occurrence: append to ``fault_log`` and —
+        with a tracer installed — emit an instant event stamped on the
+        eager serialized clock (``timeline.total``)."""
+        self.fault_log.append(report)
+        if self.tracer is not None:
+            self.tracer.instant(
+                f"fault:{report.kind}", self.timeline.total,
+                track="faults", pid=PID_HOST,
+                args={"label": report.label, "launch": report.launch,
+                      "attempt": report.attempt,
+                      "dpus": list(report.dpus), "detail": report.detail})
+
     def disable_dpus(self, dpus: Sequence[int], label: str = "manual"):
         """Administratively mark DPUs dead (fused-off lanes, tests)."""
         dead = sorted({int(d) for d in dpus})
         self.topology.ranks_of(dead)  # validates the range
         self.active_mask[dead] = False
-        self.fault_log.append(FaultReport(
+        self._log_fault(FaultReport(
             kind="permanent", label=label, dpus=tuple(dead),
             detail="disabled by host"))
 
@@ -162,7 +199,7 @@ class PIMSystem:
         newly = dies & self.active_mask
         if newly.any():
             self.active_mask &= ~dies
-            self.fault_log.append(FaultReport(
+            self._log_fault(FaultReport(
                 kind="permanent", label=label, launch=launch_idx,
                 dpus=tuple(int(d) for d in np.flatnonzero(newly))))
         return newly
@@ -255,6 +292,12 @@ class PIMSystem:
                                 contention=self.cfg.channel_contention)
         self.timeline.elapsed = sched.makespan
         self.last_schedule = sched
+        if self.tracer is not None:
+            # re-ingest under this system's key: sync() re-resolves the
+            # whole submission history, so replacement keeps the trace
+            # covering every command exactly once
+            self.tracer.ingest_schedule(sched, key=id(self),
+                                        pid=self.tracer.pid_of(self))
         return sched
 
     # ---- transfer accounting -------------------------------------------------
@@ -286,7 +329,7 @@ class PIMSystem:
                                         and secs > policy.timeout_seconds)
             if not timed_out:
                 if out.factor > 1.0:
-                    self.fault_log.append(FaultReport(
+                    self._log_fault(FaultReport(
                         kind="link", label=label, launch=xfer,
                         attempt=attempt,
                         detail=f"degraded x{out.factor:g}"))
@@ -297,7 +340,7 @@ class PIMSystem:
             # timeout configured, after the full degraded duration)
             waste = secs if policy.timeout_seconds is None \
                 else min(secs, policy.timeout_seconds)
-            self.fault_log.append(FaultReport(
+            self._log_fault(FaultReport(
                 kind="link", label=label, launch=xfer, attempt=attempt,
                 detail="timeout", wasted_seconds=waste))
             self._charge_retry(kind, label,
@@ -378,7 +421,7 @@ class PIMSystem:
             if not faulted:
                 return self._submit(sq.LAUNCH, "kernel", name, seconds, 0.0,
                                     rank_res, attempt=attempt)
-            self.fault_log.append(FaultReport(
+            self._log_fault(FaultReport(
                 kind="transient", label=name, launch=launch_idx,
                 attempt=attempt, dpus=tuple(faulted),
                 wasted_seconds=seconds))
@@ -551,7 +594,7 @@ class PIMSystem:
                     detect_lanes.add(d)
                 else:
                     silent.append((d, w, b))
-                self.fault_log.append(FaultReport(
+                self._log_fault(FaultReport(
                     kind="bitflip", label=name, launch=launch_idx,
                     attempt=attempt, dpus=(d,),
                     detail=f"word {w} bit {b}: "
@@ -570,7 +613,7 @@ class PIMSystem:
                 break
             wasted_attempts.append((attempt, tuple(faulted)))
             if attempt < policy.max_attempts - 1:
-                self.fault_log.append(FaultReport(
+                self._log_fault(FaultReport(
                     kind="transient", label=name, launch=launch_idx,
                     attempt=attempt, dpus=tuple(faulted)))
 

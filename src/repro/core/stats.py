@@ -62,6 +62,15 @@ class KernelReport:
         return self.dma_rd_bytes / max(peak, 1e-9)
 
     @property
+    def mram_write_bw_util(self) -> float:
+        """Fraction of MRAM *write* bandwidth used — ``dma_wr_bytes``
+        over the same per-DPU peak as the read side (the paper's DMA
+        engine shares one MRAM port both ways), so the writeback half of
+        streaming kernels is visible next to their read half."""
+        peak = self.mram_bw_bytes_per_cycle * self.cycles * self.n_dpus
+        return self.dma_wr_bytes / max(peak, 1e-9)
+
+    @property
     def breakdown(self) -> Dict[str, float]:
         """Active / idle(mem) / idle(revolver) / idle(RF) fractions (Fig. 6)."""
         tot = max(self.active_cycles + self.idle_mem + self.idle_rev
@@ -89,6 +98,7 @@ class KernelReport:
             "n_threads": self.n_threads, "cycles": self.cycles,
             "issued": self.issued, "ipc": round(self.ipc, 4),
             "mram_rd_util": round(self.mram_read_bw_util, 4),
+            "mram_wr_util": round(self.mram_write_bw_util, 4),
             "avg_issuable": round(self.avg_issuable, 3),
             "acq_retry": self.acq_retry,
         }

@@ -101,6 +101,13 @@ def launch_with_remap(system, name: str, binary, args: np.ndarray,
         # the dead lane's work
         placement = [(shard, pool[i % len(pool)])
                      for i, shard in enumerate(pending)]
+        if getattr(system, "tracer", None) is not None:
+            system.tracer.instant(
+                f"remap:{name}", system.timeline.total, track="recovery",
+                args={"round": round_no, "shards": list(pending),
+                      "lanes": sorted({lane for _, lane in placement}),
+                      "spares_used": [s for s in live_spares
+                                      if s in {L for _, L in placement}]})
         args2, mram2 = np.array(args), np.array(mram)
         wram2 = None if wram_extra is None else np.array(wram_extra)
         for shard, lane in placement:

@@ -144,6 +144,19 @@ class Schedule:
         launches) are counted once, not summed."""
         return max(0.0, self.makespan - self.covered(phase))
 
+    def to_chrome_trace(self) -> dict:
+        """This schedule as a Chrome-trace-event JSON object: one ``X``
+        slice per command per occupied resource lane (``chan<c>:rank<r>``
+        link shares, ``rank<r>`` compute slots, ``fabric:rank<r>``,
+        the ``retry`` lane for resourceless backoff holds), ready for
+        ``ui.perfetto.dev``.  ``json.dump`` the result, or go through
+        :class:`repro.obs.Tracer` to combine several layers' events in
+        one trace."""
+        from repro.obs.tracer import Tracer
+        t = Tracer()
+        t.ingest_schedule(self)
+        return t.to_chrome_trace()
+
 
 def schedule(queues: Sequence[CommandQueue],
              contention: float = 1.0) -> Schedule:

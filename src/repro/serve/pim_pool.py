@@ -66,6 +66,13 @@ class PimDecodePool:
         host instead."""
         frac = self.healthy_fraction
         if frac < self.min_fraction:
+            if getattr(self.system, "tracer", None) is not None:
+                self.system.tracer.instant(
+                    "pool:floor_tripped", self.system.timeline.total,
+                    track="serve",
+                    args={"healthy_fraction": frac,
+                          "min_fraction": self.min_fraction,
+                          "ranks": list(self.ranks or ())})
             raise DpuFaultError(FaultReport(
                 kind="pool_degraded", label="decode",
                 detail=f"PIM pool at {frac:.0%} healthy DPUs "

@@ -1,0 +1,532 @@
+"""repro.obs: tracer/timeline agreement, Chrome-trace export schema,
+zero-cost-when-disabled bit-exactness, trace determinism, RunProfile
+counters, the report CLI, and the observability satellites (Timeline
+label index, MRAM write-bandwidth utilization column)."""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.make_tables import (KERNEL_COLUMNS, kernel_table,
+                                    load_kernel_rows)
+from repro import obs
+from repro.cluster import PimCluster, TenantSpec, poisson_stream
+from repro.core.config import DPUConfig
+from repro.core.host import PHASES, PIMSystem, Timeline
+from repro.core.stats import KernelReport
+from repro.faults.model import FaultPlan, kill_dpu
+from repro.obs import (PID_CLUSTER, PID_HOST, PID_SYSTEM, RunProfile,
+                       Tracer, default_tracer, get_default_tracer,
+                       set_default_tracer)
+from repro.obs.report import covered, load_spans, main as report_main, render
+
+
+def _cfg(**kw):
+    base = dict(n_dpus=8, n_ranks=4, n_channels=2, mram_bytes=1 << 20)
+    return DPUConfig(**{**base, **kw})
+
+
+def _pipeline(system, stages=3):
+    """A small overlapped modeled workload: per-stage h2d + kernel on a
+    rank pair + collective + d2h, alternating streams over disjoint rank
+    pairs so an async schedule actually overlaps stages."""
+    for i in range(stages):
+        ranks = [(2 * i) % 4, (2 * i + 1) % 4]
+        with system.stream(f"s{i % 2}"):
+            system.h2d(4096, label=f"in{i}")
+            system.modeled_launch(f"k{i}", 2e-4, ranks=ranks)
+            system.collective("allreduce", 1e-4, 2048.0, ranks=ranks)
+            system.d2h(2048, label=f"out{i}")
+    system.sync()
+
+
+# ---------------------------------------------------------------------------
+# trace <-> timeline agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["inorder", "async"])
+def test_phase_span_sums_match_timeline(mode):
+    """Per-phase span busy sums equal the Timeline busy totals to 1e-9 —
+    every submitted command traced exactly once, in either queue mode."""
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode=mode, tracer=t)
+    _pipeline(s)
+    sums = t.phase_sums(t.pid_of(s))
+    for phase in PHASES:
+        assert abs(sums.get(phase, 0.0) - getattr(s.timeline, phase)) < 1e-9
+    assert t.validate() == []
+
+
+def test_overlap_saved_equals_serialized_minus_trace_makespan():
+    """timeline.overlap_saved must be recoverable from the exported
+    trace alone: serialized busy total minus the trace makespan."""
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async", tracer=t)
+    _pipeline(s, stages=4)
+    pid = t.pid_of(s)
+    makespan = t.makespan(pid)
+    assert makespan == pytest.approx(s.timeline.elapsed, abs=1e-12)
+    serialized = sum(t.phase_sums(pid).values())
+    assert serialized == pytest.approx(s.timeline.total, abs=1e-9)
+    assert s.timeline.overlap_saved == pytest.approx(
+        serialized - makespan, abs=1e-9)
+    assert s.timeline.overlap_saved > 0.0  # the async pipeline did overlap
+
+
+def test_retry_only_spans_land_on_retry_lane():
+    """Link-timeout retries produce retry-phase spans (wasted attempts +
+    resourceless backoff holds on the 'retry' lane) whose busy sum is
+    exactly the timeline's retry charge."""
+    plan = FaultPlan(seed=3, p_link_timeout=1.0)  # first attempt always hangs
+    t = Tracer()
+    s = PIMSystem(_cfg(), faults=plan, tracer=t)
+    with pytest.raises(Exception):
+        s.h2d(4096, label="doomed")  # every attempt times out
+    s.sync()
+    pid = t.pid_of(s)
+    retry_spans = [sp for sp in t.spans(pid) if sp.phase == "retry"]
+    assert retry_spans, "timeouts must be traced as retry spans"
+    assert sum(sp.busy for sp in retry_spans) == pytest.approx(
+        s.timeline.retry, abs=1e-9)
+    backoffs = [sp for sp in retry_spans if sp.tracks == ("retry",)]
+    assert backoffs, "resourceless backoff holds ride the retry lane"
+    assert t.validate() == []
+
+
+def test_validate_flags_mismatch():
+    t = Tracer()
+    s = PIMSystem(_cfg(), tracer=t)
+    _pipeline(s, stages=1)
+    t.span("phantom", 0.0, 1.0, ["rank0"], pid=t.pid_of(s), phase="kernel",
+           seconds=1.0)
+    errors = t.validate()
+    assert errors and "kernel" in errors[0]
+
+
+def test_validate_flags_never_synced_system():
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async", tracer=t)
+    s.h2d(4096)
+    assert any("never" in e for e in t.validate())
+    t.finalize()  # resolves the pending queue via sync()
+    assert t.validate() == []
+    assert s.timeline.elapsed is not None
+
+
+# ---------------------------------------------------------------------------
+# zero-cost when disabled / determinism when enabled
+# ---------------------------------------------------------------------------
+
+def _run_traced(mode, tracer, faults=None):
+    s = PIMSystem(_cfg(), mode=mode, faults=faults, tracer=tracer)
+    _pipeline(s)
+    return s
+
+
+@pytest.mark.parametrize("mode", ["inorder", "async"])
+def test_tracer_never_perturbs_the_run(mode):
+    """Enabled vs disabled tracer: timelines, events, and schedules must
+    be bit-exact — the tracer observes, it never participates."""
+    plan = FaultPlan(seed=5, p_dpu_transient=0.2)
+    base = _run_traced(mode, None, faults=plan)
+    traced = _run_traced(mode, Tracer(), faults=plan)
+    assert traced.timeline.total == base.timeline.total
+    assert traced.timeline.elapsed == base.timeline.elapsed
+    assert traced.timeline.breakdown() == base.timeline.breakdown()
+    assert traced.timeline.events == base.timeline.events
+    assert len(traced.fault_log) == len(base.fault_log)
+
+
+@pytest.mark.parametrize("mode", ["inorder", "async"])
+def test_trace_is_byte_deterministic(mode):
+    """Same seed, same mode -> byte-identical trace JSON."""
+    dumps = []
+    for _ in range(2):
+        t = Tracer()
+        _run_traced(mode, t, faults=FaultPlan(seed=7, p_dpu_transient=0.05))
+        dumps.append(json.dumps(t.to_chrome_trace(), sort_keys=True))
+    assert dumps[0] == dumps[1]
+
+
+def test_phase_busy_identical_across_modes():
+    """inorder and async trace the same commands — identical per-phase
+    busy sums (only the wall placement differs)."""
+    sums = {}
+    for mode in ("inorder", "async"):
+        t = Tracer()
+        s = _run_traced(mode, t)
+        sums[mode] = t.phase_sums(t.pid_of(s))
+    assert sums["inorder"] == sums["async"]
+
+
+def test_default_tracer_registry():
+    assert get_default_tracer() is None
+    t = Tracer()
+    with default_tracer(t):
+        assert get_default_tracer() is t
+        s = PIMSystem(_cfg())  # adopts the process-wide default
+        assert s.tracer is t
+        assert t.pid_of(s) == PID_SYSTEM
+    assert get_default_tracer() is None
+    assert set_default_tracer(None) is None
+    # outside the scope, systems are untraced again
+    assert PIMSystem(_cfg()).tracer is None
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export schema
+# ---------------------------------------------------------------------------
+
+def _structurally_valid(trace):
+    """The invariants Perfetto's loader needs (and tests pin): a
+    traceEvents list; every event has ph/pid; X events carry ts+dur and
+    busy_s args; b/e pairs balance per (pid, id); M metadata names every
+    pid and tid used."""
+    assert set(trace) == {"traceEvents", "displayTimeUnit"}
+    evs = trace["traceEvents"]
+    assert isinstance(evs, list)
+    named_pids, named_tids, used = set(), set(), set()
+    pending = {}
+    for ev in evs:
+        assert isinstance(ev["pid"], int)
+        ph = ev["ph"]
+        if ph == "M":
+            if ev["name"] == "process_name":
+                named_pids.add(ev["pid"])
+            else:
+                assert ev["name"] == "thread_name"
+                named_tids.add((ev["pid"], ev["tid"]))
+            continue
+        used.add((ev["pid"], ev.get("tid")))
+        assert isinstance(ev["ts"], float) and ev["ts"] >= 0.0
+        if ph == "X":
+            assert ev["dur"] >= 0.0
+            assert "busy_s" in ev["args"]
+        elif ph == "b":
+            key = (ev["pid"], ev["id"])
+            assert key not in pending
+            pending[key] = ev["ts"]
+        elif ph == "e":
+            assert ev["ts"] >= pending.pop((ev["pid"], ev["id"]))
+        else:
+            assert ph == "i"
+    assert not pending, "unbalanced async b/e pairs"
+    assert {p for p, _ in used} <= named_pids
+    assert used <= named_tids
+    return evs
+
+
+def test_chrome_trace_structure_and_lanes():
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async", tracer=t)
+    _pipeline(s)
+    evs = _structurally_valid(t.to_chrome_trace())
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    # per-resource lanes: channel:rank link shares and rank compute slots
+    assert any(tr.startswith("chan") and ":rank" in tr for tr in tracks)
+    assert {"rank0", "rank1"} <= tracks
+    # a multi-resource command fans out to one X event per held lane
+    xs = [e for e in evs if e["ph"] == "X" and e["name"] == "in0"]
+    assert len(xs) >= 1 and len({e["tid"] for e in xs}) == len(xs)
+    assert all(e["args"]["busy_s"] == xs[0]["args"]["busy_s"] for e in xs)
+
+
+def test_zero_event_export_is_valid():
+    t = Tracer()
+    assert t.validate() == []
+    assert t.makespan() == 0.0
+    trace = t.to_chrome_trace()
+    _structurally_valid(trace)
+    assert trace["traceEvents"] == []
+    assert load_spans(trace) == []
+    assert "0 spans" in render(trace)
+
+
+def test_save_roundtrip(tmp_path):
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async", tracer=t)
+    _pipeline(s)
+    path = str(tmp_path / "run.trace.json")
+    assert t.save(path) == path
+    disk = json.load(open(path))
+    assert disk == json.loads(json.dumps(t.to_chrome_trace()))
+    # the exported busy time survives the report loader round-trip
+    spans = load_spans(disk)
+    assert sum(sp["busy"] for sp in spans) == pytest.approx(
+        s.timeline.total, abs=1e-9)
+    assert max(sp["end"] for sp in spans) == pytest.approx(
+        s.timeline.elapsed, abs=1e-9)
+
+
+def test_schedule_to_chrome_trace_standalone():
+    s = PIMSystem(_cfg(), mode="async")  # no tracer
+    for i in range(2):
+        s.h2d(1024)
+        s.modeled_launch(f"k{i}", 1e-4, ranks=[i])
+    sched = s.sync()
+    trace = sched.to_chrome_trace()
+    evs = _structurally_valid(trace)
+    assert any(e["ph"] == "X" for e in evs)
+    assert max((e["ts"] + e["dur"] for e in evs if e["ph"] == "X")) \
+        == pytest.approx(sched.makespan * 1e6, abs=1e-6)
+
+
+def test_fault_instants_on_host_clock():
+    t = Tracer()
+    s = PIMSystem(_cfg(), faults=FaultPlan(events=(kill_dpu(1, 0),)),
+                  tracer=t)
+    s.modeled_launch("k", 1e-4)
+    s.sync()
+    inst = [i for i in t.instants(PID_HOST) if i.name == "fault:permanent"]
+    assert len(inst) == 1 and inst[0].track == "faults"
+    args = dict(inst[0].args)
+    assert tuple(args["dpus"]) == (1,) and args["launch"] == 0
+    # and the instant made it into the export under the host pid
+    evs = t.to_chrome_trace()["traceEvents"]
+    assert any(e["ph"] == "i" and e["name"] == "fault:permanent"
+               for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# cluster tracing
+# ---------------------------------------------------------------------------
+
+def _cluster_run(tracer, rate=0.05, seed=9):
+    faults = FaultPlan(seed=2, p_dpu_permanent=rate) if rate else None
+    system = PIMSystem(DPUConfig(n_dpus=32, n_ranks=8, n_channels=4,
+                                 mram_bytes=1 << 20),
+                      mode="async", faults=faults, tracer=tracer)
+    tenants = [
+        TenantSpec("graph", rate_hz=400.0, kinds=("BFS",), n_ranks=2,
+                   priority=1, slo_seconds=0.05),
+        TenantSpec("lm", rate_hz=200.0, kinds=("lm_decode",), size=6,
+                   n_ranks=2, priority=2, slo_seconds=0.02),
+    ]
+    jobs = poisson_stream(tenants, horizon=0.04, seed=seed)
+    cluster = PimCluster(system, policy="fault_aware", spare_ranks=2)
+    return cluster, cluster.run(jobs)
+
+
+def test_cluster_trace_jobs_and_instants():
+    t = Tracer()
+    cluster, report = _cluster_run(t)
+    # whole-job async spans, one per finalized job, on tenant lanes
+    jobs = [sp for sp in t.spans(PID_CLUSTER) if sp.async_id is not None]
+    assert len(jobs) == len(report.outcomes)
+    assert all(sp.tracks[0].startswith("tenant:") for sp in jobs)
+    assert {dict(sp.args)["status"] for sp in jobs} <= \
+        {"completed", "failed"}
+    # one admit instant per placement, matching the pinned admission log
+    admits = [i for i in t.instants(PID_CLUSTER) if i.name == "job:admit"]
+    assert [(dict(i.args)["jid"], i.ts) for i in admits] \
+        == [(jid, ts) for jid, ts, _ in report.admissions]
+    # kernel steps occupy per-rank lanes under the cluster pid
+    steps = [sp for sp in t.spans(PID_CLUSTER) if sp.async_id is None]
+    assert steps and all(
+        all(tr.startswith("rank") for tr in sp.tracks) for sp in steps)
+    _structurally_valid(cluster.trace)
+
+
+def test_cluster_trace_property_requires_tracer():
+    cluster, _ = _cluster_run(None, rate=0.0)
+    with pytest.raises(RuntimeError):
+        cluster.trace
+
+
+def test_cluster_metrics_bit_exact_with_tracer():
+    _, base = _cluster_run(None)
+    _, traced = _cluster_run(Tracer())
+    assert traced.metrics(None) == base.metrics(None)
+    assert [(o.jid, o.status, o.t_done) for o in traced.outcomes] \
+        == [(o.jid, o.status, o.t_done) for o in base.outcomes]
+
+
+def test_multi_system_pids_are_stable():
+    t = Tracer()
+    a = PIMSystem(_cfg(), tracer=t)
+    b = PIMSystem(_cfg(), tracer=t)
+    assert (t.pid_of(a), t.pid_of(b)) == (PID_SYSTEM, "system1")
+    assert t.systems == (a, b)
+    _pipeline(a, stages=1)
+    _pipeline(b, stages=1)
+    assert t.validate() == []
+    assert t.phase_sums(PID_SYSTEM)["kernel"] == pytest.approx(
+        a.timeline.kernel, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Timeline label index (satellite)
+# ---------------------------------------------------------------------------
+
+def test_by_label_aggregates_across_phases():
+    tl = Timeline()
+    tl.add("h2d", 1.0, label="x", nbytes=10.0)
+    tl.add("kernel", 2.0, label="x")
+    tl.add("kernel", 4.0, label="y")
+    tl.add("retry", 0.5)  # label defaults to the phase name
+    assert tl.by_label("kernel") == {"x": 2.0, "y": 4.0}
+    assert tl.by_label("h2d") == {"x": 1.0}
+    assert tl.by_label() == {"x": 3.0, "y": 4.0, "retry": 0.5}
+    assert tl.by_label("d2h") == {}
+
+
+def test_by_label_index_matches_event_rescan():
+    """The add()-time index must agree with a full event-list rescan
+    (the O(events)-per-call implementation it replaced)."""
+    rng = np.random.default_rng(0)
+    tl = Timeline()
+    for _ in range(200):
+        tl.add(PHASES[rng.integers(len(PHASES))],
+               float(rng.random()), label=f"l{rng.integers(5)}")
+    for phase in (None,) + PHASES:
+        manual = {}
+        for ph, label, sec, _ in tl.events:
+            if phase is None or ph == phase:
+                manual[label] = manual.get(label, 0.0) + sec
+        got = tl.by_label(phase)
+        assert got.keys() == manual.keys()
+        for label in manual:  # summation order differs -> approx, not ==
+            assert got[label] == pytest.approx(manual[label], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# KernelReport.mram_write_bw_util + kernel table (satellites)
+# ---------------------------------------------------------------------------
+
+def _report(**kw):
+    base = dict(
+        name="k", n_dpus=4, n_threads=8, cycles=1000, issued=800,
+        active_cycles=800, idle_mem=150, idle_rev=30, idle_rf=20,
+        cls_counts={"alu": 800}, hist=np.array([0.0, 4.0]),
+        ts=np.zeros((4, 1)), dma_rd_bytes=16000.0, dma_wr_bytes=8000.0,
+        row_hit=10, row_miss=2, tlb_hit=5, tlb_miss=1, dc_hit=3, dc_miss=1,
+        acq_retry=0, freq_mhz=350, mram_bw_bytes_per_cycle=8.0)
+    return KernelReport(**{**base, **kw})
+
+
+def test_mram_write_bw_util():
+    rep = _report()
+    peak = 8.0 * 1000 * 4
+    assert rep.mram_write_bw_util == pytest.approx(8000.0 / peak)
+    assert rep.mram_read_bw_util == pytest.approx(16000.0 / peak)
+    assert _report(dma_wr_bytes=0.0).mram_write_bw_util == 0.0
+    row = rep.to_row()
+    assert row["mram_wr_util"] == round(rep.mram_write_bw_util, 4)
+    # column adjacency: the write util sits right next to the read util
+    keys = list(row)
+    assert keys.index("mram_wr_util") == keys.index("mram_rd_util") + 1
+
+
+def test_kernel_table_deterministic_columns(tmp_path):
+    rows = [_report(name="b").to_row(), _report(name="a").to_row()]
+    rows[0]["extra_z"] = 1
+    rows[1]["extra_a"] = 2
+    table = kernel_table(rows)
+    header = [c.strip() for c in table.splitlines()[0].strip("|").split("|")]
+    fixed = [c for c in KERNEL_COLUMNS if c in rows[0] or c in rows[1]]
+    assert header == fixed + sorted(
+        {k for r in rows for k in r} - set(KERNEL_COLUMNS))
+    # shuffling dict insertion order must not change the rendering
+    shuffled = [dict(reversed(list(r.items()))) for r in rows]
+    assert kernel_table(shuffled) == table
+    # loader accepts both a bare to_row() list and a RunProfile snapshot
+    p1, p2 = str(tmp_path / "rows.json"), str(tmp_path / "prof.json")
+    json.dump(rows, open(p1, "w"))
+    json.dump({"kernels": rows}, open(p2, "w"))
+    assert load_kernel_rows(p1) == load_kernel_rows(p2) == rows
+
+
+# ---------------------------------------------------------------------------
+# RunProfile
+# ---------------------------------------------------------------------------
+
+def test_run_profile_counters_and_exports(tmp_path):
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async",
+                  faults=FaultPlan(events=(kill_dpu(0, 1),)), tracer=t)
+    _pipeline(s)
+    prof = RunProfile(name="unit")
+    for rep in (_report(name="va"), _report(name="va"), _report(name="gemv")):
+        prof.record_report(rep)
+    prof.record_system(s)
+    prof.record_compile_cache()
+    c = prof.counters()
+    assert c["timeline_seconds{phase=kernel}"] == pytest.approx(
+        s.timeline.kernel)
+    assert c["kernel_launches{kernel=va}"] == 2
+    # summed counters double, so the derived IPC is launch-invariant
+    assert c["kernel_ipc{kernel=va}"] == pytest.approx(
+        c["kernel_ipc{kernel=gemv}"])
+    assert c["faults_total{kind=permanent}"] == 1
+    assert c["overlap_saved_seconds"] == pytest.approx(
+        s.timeline.overlap_saved)
+    assert list(c) == list(prof.counters())  # deterministic ordering
+    # collective byte volumes are attributed per label
+    assert prof.label_bytes["inter_dpu"]["allreduce"] == pytest.approx(
+        3 * 2048.0)
+    snap = prof.to_json()
+    assert [r["name"] for r in snap["kernels"]] == ["gemv", "va"]
+    path = str(tmp_path / "prof.json")
+    prof.save(path)
+    assert json.load(open(path))["counters"].keys() == c.keys()
+    prom = prof.to_prometheus()
+    assert "# TYPE repro_kernel_ipc gauge" in prom
+    assert 'repro_kernel_launches{kernel="va"} 2' in prom
+    assert 'repro_faults_total{kind="permanent"} 1' in prom
+
+
+def test_run_profile_compile_cache_is_delta():
+    from repro.core import compile_cache
+    prof = RunProfile()
+    prof.record_compile_cache()
+    assert all(v == 0 for v in prof.compile_cache.values())
+    assert prof.compile_cache.keys() >= {"hits", "misses", "launches"}
+    assert compile_cache.stats().keys() == prof._cache0.keys()
+
+
+def test_run_profile_cluster_section():
+    prof = RunProfile()
+    _, report = _cluster_run(Tracer(), rate=0.0)
+    prof.record_cluster(report)
+    c = prof.counters()
+    assert c["cluster_utilization"] == pytest.approx(report.utilization())
+    assert c["cluster_goodput{tenant=lm}"] == \
+        report.metrics("lm")["goodput"]
+
+
+# ---------------------------------------------------------------------------
+# report CLI
+# ---------------------------------------------------------------------------
+
+def test_report_cli_renders_everything(tmp_path, capsys):
+    t = Tracer()
+    s = PIMSystem(_cfg(), mode="async", tracer=t)
+    _pipeline(s)
+    prof = RunProfile()
+    prof.record_report(_report(name="va"))
+    prof.record_system(s)
+    _, cluster_report = _cluster_run(Tracer(), rate=0.0)
+    prof.record_cluster(cluster_report)
+    tpath = t.save(str(tmp_path / "r.trace.json"))
+    ppath = prof.save(str(tmp_path / "r.counters.json"))
+    rc = report_main([tpath, "--profile", ppath, "--top", "3",
+                      "--prometheus"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for needle in ("top 3 spans", "phase breakdown", "exposed",
+                   "-- kernels (profile) --", "va", "mram", "compile cache",
+                   "per-tenant SLO", "FLEET",
+                   "timeline_seconds{phase=kernel}"):
+        assert needle in out, f"report missing {needle!r}"
+
+
+def test_report_covered_interval_union():
+    spans = [{"name": "a", "phase": "kernel", "start": 0.0, "end": 2.0,
+              "busy": 2.0, "wasted": 0.0, "nbytes": 0.0},
+             {"name": "b", "phase": "kernel", "start": 1.0, "end": 3.0,
+              "busy": 2.0, "wasted": 0.0, "nbytes": 0.0},
+             {"name": "c", "phase": "kernel", "start": 5.0, "end": 6.0,
+              "busy": 1.0, "wasted": 0.0, "nbytes": 0.0}]
+    assert covered(spans, "kernel") == pytest.approx(4.0)
+    assert covered(spans, "h2d") == 0.0
