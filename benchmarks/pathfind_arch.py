@@ -1,0 +1,76 @@
+"""Architecture pathfinding: MIMD (UPMEM-style) vs HBM-PIM all-bank.
+
+Two benches:
+
+* :func:`compare` — the same workloads (streaming GEMVS, BFS) on three
+  execution backends through the unchanged ``Workload`` API: the scalar
+  MIMD baseline, the SIMT vector DPU, and the HBM-PIM all-bank target.
+  One row per (arch, workload) with cycles / kernel seconds / IPC /
+  end-to-end — the paper's "which PIM style wins where" table.
+
+* :func:`replay_sweep` — the record/replay methodology: simulate BFS
+  *once* on the baseline, record its command stream, then sweep the
+  interconnect design space (fabric x channel count) by re-pricing the
+  trace with :func:`repro.trace.replay` — no DPU cycles re-simulated.
+  Rows carry the live-vs-replay wall-clock speedup alongside each sweep
+  point's modeled times.
+"""
+from __future__ import annotations
+
+import time
+
+from repro import trace
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.workloads import get
+
+ARCHS = (
+    ("mimd-scalar", {}),
+    ("mimd-simt", {"simt_width": 4}),
+    ("hbmpim", {"backend": "hbmpim"}),
+)
+
+
+def compare(scale: float = 0.05, n_threads: int = 8):
+    rows = []
+    for arch, kw in ARCHS:
+        for wl_name in ("GEMVS", "BFS"):
+            cfg = DPUConfig(n_dpus=8, n_ranks=2, n_channels=2, **kw)
+            system = PIMSystem(cfg)
+            _, rep = get(wl_name).run(system, n_threads, scale=scale, seed=0)
+            rows.append({
+                "arch": arch, "workload": wl_name,
+                "cycles": rep.cycles, "ipc": round(rep.ipc, 4),
+                "kernel_s": rep.kernel_seconds,
+                "end_to_end_s": system.timeline.end_to_end,
+            })
+    return rows
+
+
+def replay_sweep(scale: float = 0.05, n_threads: int = 8):
+    base = DPUConfig(n_dpus=8, n_ranks=4, n_channels=2)
+    # warm the compile cache so t_live measures steady-state simulation
+    get("BFS").run(PIMSystem(base), n_threads, scale=scale, seed=0)
+
+    t0 = time.perf_counter()
+    system = PIMSystem(base)
+    rec = trace.record(system)
+    get("BFS").run(system, n_threads, scale=scale, seed=0)
+    system.sync()
+    t_live = time.perf_counter() - t0
+
+    rows = []
+    for fabric in ("host", "direct", "hier"):
+        for channels in (1, 2, 4):
+            cfg = base.replace(fabric=fabric, n_channels=channels)
+            t0 = time.perf_counter()
+            res = trace.replay(rec.records, cfg=cfg)
+            t_replay = time.perf_counter() - t0
+            rows.append({
+                "fabric": fabric, "channels": channels,
+                "end_to_end_s": res.end_to_end,
+                "inter_dpu_s": res.timeline.inter_dpu,
+                "h2d_s": res.timeline.h2d,
+                "replay_speedup": round(t_live / max(t_replay, 1e-9), 1),
+            })
+    return rows

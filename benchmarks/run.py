@@ -30,7 +30,8 @@ import os
 import time
 
 #: suite families selectable via --suite (benches declare theirs inline)
-SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults", "cluster")
+SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults", "cluster",
+               "pathfind")
 
 
 def _emit(name: str, wall_s: float, rows):
@@ -44,6 +45,9 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=("all",) + SUITE_NAMES)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print every registered bench (grouped by suite) "
+                         "and exit without running anything")
     ap.add_argument("--dryrun-dir", default="reports/dryrun")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run to PATH "
@@ -65,7 +69,8 @@ def main() -> None:
         profile = obs.RunProfile(name=f"bench:{args.suite}")
 
     from benchmarks import cluster_load, comm_scaling, fault_tolerance, \
-        lm_roofline, overlap_scaling, pim_figs, rank_overlap
+        lm_roofline, overlap_scaling, pathfind_arch, pim_figs, \
+        rank_overlap, trace_replay
 
     char = None
 
@@ -103,9 +108,22 @@ def main() -> None:
         "cluster_smoke": ("cluster", lambda: [cluster_load.smoke()]),
         "cluster_load": ("cluster", lambda: cluster_load.load_table(
             args.scale)),
+        "pathfind_arch": ("pathfind", lambda: pathfind_arch.compare(
+            args.scale)),
+        "pathfind_replay_sweep": ("pathfind",
+                                  lambda: pathfind_arch.replay_sweep(
+                                      args.scale)),
+        "trace_replay_smoke": ("pathfind", lambda: [trace_replay.smoke(
+            args.scale)]),
     }
     bad = {k for k, (s, _) in benches.items() if s not in SUITE_NAMES}
     assert not bad, f"benches with unknown suite: {bad}"
+    if args.list:
+        for suite in SUITE_NAMES:
+            members = sorted(k for k, (s, _) in benches.items()
+                             if s == suite)
+            print(f"{suite}: {', '.join(members)}")
+        return
     selected = {k: fn for k, (suite, fn) in benches.items()
                 if args.suite in ("all", suite)}
     if args.only:

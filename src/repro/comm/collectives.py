@@ -31,10 +31,21 @@ OPS: Dict[str, Callable] = {
 }
 
 
-def _charge(system, kind: str, seconds: float, nbytes: float, ranks=None):
+def _charge(system, kind: str, seconds: float, nbytes: float, ranks=None,
+            price=None):
     # routes through the repro.sched command queue (COLLECTIVE command on
-    # the current stream) and the timeline's inter_dpu phase
-    system.collective(kind, seconds, nbytes, ranks=ranks)
+    # the current stream) and the timeline's inter_dpu phase; ``price``
+    # records the fabric call that produced ``seconds`` so a trace
+    # replay can re-price the exchange under a different fabric/topology
+    system.collective(kind, seconds, nbytes, ranks=ranks, price=price)
+
+
+def _price(idx, method: str, *args) -> dict:
+    """Re-pricing spec: replay calls ``fabric[.subset(idx)].method(*args)``."""
+    return {"method": method,
+            "args": [int(a) if isinstance(a, (int, np.integer)) else float(a)
+                     for a in args],
+            "dpus": None if idx is None else [int(d) for d in idx]}
 
 
 def _check_root_alive(system, root: int, kind: str):
@@ -118,7 +129,8 @@ def broadcast(system, mram: np.ndarray, off: int, n: int, root: int = 0,
     view[:, off:off + n] = view[r, off:off + n]
     if D > 1:
         _charge(system, "broadcast",
-                fab.broadcast(4.0 * n, r), 4.0 * n * (D - 1), ranks)
+                fab.broadcast(4.0 * n, r), 4.0 * n * (D - 1), ranks,
+                price=_price(idx, "broadcast", 4.0 * n, r))
     _commit(mram, idx, view)
 
 
@@ -142,7 +154,8 @@ def scatter(system, mram: np.ndarray, src_off: int, dst_off: int,
     if D > 1:
         _charge(system, "scatter",
                 fab.scatter(4.0 * n_per_dpu, r),
-                4.0 * n_per_dpu * (D - 1), ranks)
+                4.0 * n_per_dpu * (D - 1), ranks,
+                price=_price(idx, "scatter", 4.0 * n_per_dpu, r))
     _commit(mram, idx, view)
 
 
@@ -164,7 +177,8 @@ def gather(system, mram: np.ndarray, src_off: int, dst_off: int,
     if D > 1:
         _charge(system, "gather",
                 fab.gather(4.0 * n_per_dpu, r),
-                4.0 * n_per_dpu * (D - 1), ranks)
+                4.0 * n_per_dpu * (D - 1), ranks,
+                price=_price(idx, "gather", 4.0 * n_per_dpu, r))
     _commit(mram, idx, view)
 
 
@@ -180,7 +194,8 @@ def reduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
     if D > 1:
         # D-1 remote contributions cross the link; root's stays local
         _charge(system, "reduce",
-                fab.reduce(4.0 * n, r), 4.0 * n * (D - 1), ranks)
+                fab.reduce(4.0 * n, r), 4.0 * n * (D - 1), ranks,
+                price=_price(idx, "reduce", 4.0 * n, r))
     _commit(mram, idx, view)
 
 
@@ -195,7 +210,8 @@ def allreduce(system, mram: np.ndarray, off: int, n: int, op: str = "sum",
     if D > 1:
         # nbytes counts one direction's payload, like every other primitive
         _charge(system, "allreduce",
-                fab.allreduce(4.0 * n), 4.0 * n * D, ranks)
+                fab.allreduce(4.0 * n), 4.0 * n * D, ranks,
+                price=_price(idx, "allreduce", 4.0 * n))
     _commit(mram, idx, view)
 
 
@@ -214,7 +230,8 @@ def allgather(system, mram: np.ndarray, src_off: int, dst_off: int,
     if D > 1:
         _charge(system, "allgather",
                 fab.allgather(4.0 * n_per_dpu),
-                4.0 * n_per_dpu * D * (D - 1), ranks)
+                4.0 * n_per_dpu * D * (D - 1), ranks,
+                price=_price(idx, "allgather", 4.0 * n_per_dpu))
     _commit(mram, idx, view)
 
 
@@ -234,5 +251,6 @@ def alltoall(system, mram: np.ndarray, src_off: int, dst_off: int,
     if D > 1:
         _charge(system, "alltoall",
                 fab.alltoall(4.0 * n_per_pair),
-                4.0 * n_per_pair * D * (D - 1), ranks)
+                4.0 * n_per_pair * D * (D - 1), ranks,
+                price=_price(idx, "alltoall", 4.0 * n_per_pair))
     _commit(mram, idx, view)

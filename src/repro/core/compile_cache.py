@@ -42,7 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, isa, simt
+from repro.core import backend as backends
+from repro.core import engine
+from repro.core.backend import resolve_backend
 from repro.core.config import DPUConfig
 
 #: smallest padded program length (instruction slots)
@@ -93,10 +95,8 @@ _HITS = 0
 _MISSES = 0
 
 
-def _make_go(cfg: DPUConfig, backend: str) -> Callable:
-    mod = simt if backend == "simt" else engine
-    step = mod.make_step_traced(cfg)
-    cond = engine.make_cond(cfg)
+def _make_go(cfg: DPUConfig, be: "backends.ExecBackend", T: int) -> Callable:
+    step, cond = be.step_driver(cfg, T)
 
     def drive(ir, st):
         return jax.lax.while_loop(cond, lambda s: step(ir, s), st)
@@ -106,31 +106,30 @@ def _make_go(cfg: DPUConfig, backend: str) -> Callable:
     return jax.jit(drive, donate_argnums=(1,))
 
 
-def _get_entry(cfg: DPUConfig, backend: str, P: int, Dp: int, T: int,
-               M: int) -> _Entry:
+def _get_entry(cfg: DPUConfig, be: "backends.ExecBackend", P: int, Dp: int,
+               T: int, M: int) -> _Entry:
     global _HITS, _MISSES
-    key = (backend, cfg.static_key(), P, Dp, T, M)
+    key = (be.name, be.static_key(cfg), P, Dp, T, M)
     with _LOCK:
         entry = _ENTRIES.get(key)
         if entry is None:
             _MISSES += 1
-            entry = _Entry(go=_make_go(cfg, backend), key=key)
+            entry = _Entry(go=_make_go(cfg, be, T), key=key)
             _ENTRIES[key] = entry
         else:
             _HITS += 1
         return entry
 
 
-def _padded_state(cfg: DPUConfig, backend: str, binary, wram_init, mram_init,
-                  T: int, Dp: int, all_done: bool = False,
-                  ndpus_reg: int = None):
+def _padded_state(cfg: DPUConfig, be: "backends.ExecBackend", binary,
+                  wram_init, mram_init, T: int, Dp: int,
+                  all_done: bool = False, ndpus_reg: int = None):
     """Initial state padded to the DPU bucket, masked lanes DONE.
 
     ``ndpus_reg`` overrides the ``N_DPUS`` register the kernels read —
     runtime state, not part of any cache key.  The fault runtime uses it
     so a degraded subset launch (survivors of a logically ``n``-wide
     system) still sees the logical width."""
-    mod = simt if backend == "simt" else engine
     D = cfg.n_dpus
     if Dp != D:
         wram_init = np.concatenate(
@@ -138,32 +137,28 @@ def _padded_state(cfg: DPUConfig, backend: str, binary, wram_init, mram_init,
         mram_init = np.concatenate(
             [mram_init, np.zeros((Dp - D, mram_init.shape[1]), np.int32)])
         cfg = cfg.replace(n_dpus=Dp)
-    st = mod.make_state_np(cfg, binary, wram_init, mram_init, T)
+    st = be.make_state(cfg, binary, wram_init, mram_init, T)
     if Dp != D:
-        st["status"][D:] = engine.DONE          # masked lanes never issue
-        st["regs"][:, :, isa.R_NDPU] = D        # kernels see the logical size
+        be.pad_lanes(cfg, st, D)                # masked lanes never issue
     if ndpus_reg is not None:
-        st["regs"][:D, :, isa.R_NDPU] = int(ndpus_reg)
+        be.set_ndpus(st, D, ndpus_reg)
     if all_done:
-        st["status"][:] = engine.DONE
+        be.finish_all(st)
     return jax.tree_util.tree_map(jnp.asarray, st)
 
 
 def _launch(cfg: DPUConfig, binary, wram_init, mram_init, T: int,
-            backend: str, pad: bool, all_done: bool = False,
+            be: "backends.ExecBackend", pad: bool, all_done: bool = False,
             ndpus_reg: int = None):
-    if backend == "simt":
-        assert cfg.simt_width > 0, "simt backend needs simt_width > 0"
-        assert T % cfg.simt_width == 0, \
-            "n_tasklets must be a multiple of warp width"
+    be.validate(cfg, binary, T)
     wram_init = np.ascontiguousarray(np.asarray(wram_init, np.int32))
     mram_init = np.ascontiguousarray(np.asarray(mram_init, np.int32))
     capacity = binary.opcode.shape[0]
     P = program_bucket(binary.n_instrs, capacity) if pad else capacity
     Dp = dpu_bucket(cfg.n_dpus) if pad else cfg.n_dpus
-    st0 = _padded_state(cfg, backend, binary, wram_init, mram_init, T, Dp,
+    st0 = _padded_state(cfg, be, binary, wram_init, mram_init, T, Dp,
                         all_done=all_done, ndpus_reg=ndpus_reg)
-    entry = _get_entry(cfg, backend, P, Dp, T, mram_init.shape[1])
+    entry = _get_entry(cfg, be, P, Dp, T, mram_init.shape[1])
     ir = tuple(jnp.asarray(a[:P]) for a in binary.arrays)
     out = entry.go(ir, st0)
     entry.launches += 1
@@ -177,8 +172,9 @@ def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads: int = None,
 
     The launch path behind ``engine.run`` and ``simt.run``:
 
-    * ``backend`` — ``"scalar"`` | ``"simt"`` (default: by
-      ``cfg.simt_width``);
+    * ``backend`` — a registered :class:`repro.core.backend.ExecBackend`
+      name (default: :func:`~repro.core.backend.resolve_backend` —
+      ``cfg.backend``, else by ``cfg.simt_width``);
     * ``pad=False`` disables shape bucketing (exact shapes; used by the
       bit-exactness tests as the unpadded reference);
     * ``ndpus_reg`` overrides the ``N_DPUS`` register (degraded remap
@@ -188,10 +184,9 @@ def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads: int = None,
 
     Returns the final state as a host-numpy pytree sliced back to the
     logical ``cfg.n_dpus`` rows."""
-    if backend is None:
-        backend = "simt" if cfg.simt_width > 0 else "scalar"
+    be = backends.get(resolve_backend(cfg, backend))
     T = n_threads or cfg.n_tasklets
-    _, out = _launch(cfg, binary, wram_init, mram_init, T, backend, pad,
+    _, out = _launch(cfg, binary, wram_init, mram_init, T, be, pad,
                      ndpus_reg=ndpus_reg)
     out = jax.tree_util.tree_map(np.asarray, out)
     if out["status"].shape[0] != cfg.n_dpus:
@@ -208,13 +203,12 @@ def prewarm(cfg: DPUConfig, binary, mram_words: int = None,
 
     ``mram_words`` must match the MRAM image width of the real launch
     (default: ``cfg.mram_words``)."""
-    if backend is None:
-        backend = "simt" if cfg.simt_width > 0 else "scalar"
+    be = backends.get(resolve_backend(cfg, backend))
     T = n_threads or cfg.n_tasklets
     M = mram_words or cfg.mram_words
     wram = np.zeros((cfg.n_dpus, 1), np.int32)
     mram = np.zeros((cfg.n_dpus, M), np.int32)
-    entry, out = _launch(cfg, binary, wram, mram, T, backend, pad=True,
+    entry, out = _launch(cfg, binary, wram, mram, T, be, pad=True,
                          all_done=True)
     jax.block_until_ready(out)
     return entry.key

@@ -14,6 +14,9 @@ _NON_ENGINE_FIELDS = frozenset({
     "n_ranks", "n_channels", "channel_contention",
     "fabric", "pim_link_gbps", "pim_link_latency_us",
     "intra_rank_gbps", "intra_rank_latency_us",
+    # the execution backend name is keyed explicitly by the compile cache
+    # (repro.core.backend resolves it), never read by a traced step
+    "backend",
 })
 
 
@@ -97,6 +100,23 @@ class DPUConfig:
     # 700 MB/s design point — the paper's "not a fundamental constraint"
     # observation (§V-B).  2.4 / 0.7 = 3.4x.
     coalesced_bw_mult: float = 3.4
+
+    # ----- execution backend (repro.core.backend registry) -------------------
+    # "" = auto: "simt" when simt_width > 0, else "scalar".  Any other
+    # value names a registered ExecBackend ("scalar", "simt", "hbmpim",
+    # "hbmpim_cmd", ...) — the pathfinding axis that swaps the UPMEM-style
+    # MIMD DPU for the HBM-PIM all-bank SIMD model on the same workloads.
+    backend: str = ""
+
+    # ----- HBM-PIM all-bank target (repro.core.hbmpim) -----------------------
+    # SIMD lanes per bank command (one GRF register = hbm_lanes words;
+    # HBM-PIM's PCU operates on 256-bit vectors = 16 lanes)
+    hbm_lanes: int = 16
+    # CRF command slots a native command program may occupy.  The real
+    # hardware holds 32 μcode slots; the default is a deliberately
+    # generous pathfinding enlargement so unrolled command streams fit
+    # without a host-side loop around every 32 commands.
+    hbm_crf_slots: int = 2048
 
     # ----- case study #3: MMU -----------------------------------------------
     mmu: bool = False

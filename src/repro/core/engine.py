@@ -618,8 +618,9 @@ def run(cfg: DPUConfig, binary: isa.Binary, wram_init, mram_init,
         n_threads: int = None, ndpus_reg: int = None):
     """Simulate to completion; returns the final state (host numpy pytree).
 
-    Launches through :mod:`repro.core.compile_cache`: warm relaunches of
-    any kernel with the same padded shape reuse one XLA executable."""
+    Launches the ``"scalar"`` :class:`repro.core.backend.ExecBackend`
+    through :mod:`repro.core.compile_cache`: warm relaunches of any
+    kernel with the same padded shape reuse one XLA executable."""
     from repro.core import compile_cache
     return compile_cache.run(cfg, binary, wram_init, mram_init,
                              n_threads=n_threads, backend="scalar",

@@ -1,0 +1,443 @@
+"""HBM-PIM all-bank execution backends (the paper's pathfinding target).
+
+Samsung's HBM-PIM (Aquabolt-XL/FIMDRAM) sits at the opposite corner of
+the PIM design space from UPMEM: instead of thousands of independently
+programmed scalar DPUs, every bank hosts one SIMD FP/ALU pipe and *all
+banks execute the same microcoded command stream in lockstep* (all-bank
+mode), driven by a tiny Command Register File (CRF) and per-bank vector
+(GRF) / scalar (SRF) register files.  This module models that target on
+top of the same compile-cache/`Timeline`/`KernelReport` machinery as the
+UPMEM engines, registered as two :class:`repro.core.backend.ExecBackend`
+implementations:
+
+* ``"hbmpim"`` (:class:`AllBankBackend`) — the *compat* target: runs
+  unmodified uPIM binaries in all-bank lockstep by executing them on the
+  SIMT engine with one warp as wide as the whole tasklet set and DMA
+  coalescing always on.  This is how the existing workloads (BFS, SSORT,
+  ...) run on the second architecture without touching a line of kernel
+  code: ``DPUConfig(backend="hbmpim")`` and launch as usual.
+* ``"hbmpim_cmd"`` (:class:`CmdBackend`) — the *native* target: a
+  bank-level command-stream model executing :class:`CrfProgram` μcode
+  (NOP/EXIT/JUMP/MOV/FILL/ADD/MUL/MAC over BANK/GRF_A/GRF_B/SRF
+  operands) with open-row timing per bank access.  Launched through
+  :func:`launch_commands`, which charges the host timeline exactly like
+  ``PIMSystem.launch``.
+
+Geometry knobs live on :class:`~repro.core.config.DPUConfig`:
+``hbm_lanes`` (SIMD lanes per bank = words per GRF register / bank row
+burst) and ``hbm_crf_slots`` (CRF capacity; programs that exceed it are
+rejected by :meth:`CmdBackend.validate`).
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backends
+from repro.core import engine, isa, simt
+from repro.core.config import DPUConfig
+
+
+# ---------------------------------------------------------------------------
+# native command model: CRF opcodes + operand encoding
+# ---------------------------------------------------------------------------
+
+
+class CmdOp(enum.IntEnum):
+    """HBM-PIM CRF microcode (the Aquabolt-XL command set, integerized)."""
+
+    NOP = 0
+    EXIT = 1
+    JUMP = 2      # imm = target slot, ra = extra trips (raw count, no kind)
+    MOV = 3       # dst <- a
+    FILL = 4      # dst <- a  (bank->GRF spelling of MOV; same semantics)
+    ADD = 5       # dst <- a + b
+    MUL = 6       # dst <- a * b
+    MAC = 7       # dst <- dst + a * b
+
+
+#: operand kinds (top byte of an operand code)
+K_BANK, K_GRF_A, K_GRF_B, K_SRF = 0, 1, 2, 3
+
+_IDX_MASK = 0xFFFFFF
+
+
+def bank(row: int) -> int:
+    """Bank operand: one ``hbm_lanes``-word burst at MRAM row ``row``."""
+    return (K_BANK << 24) | (int(row) & _IDX_MASK)
+
+
+def grf_a(i: int) -> int:
+    """Vector register GRF_A[i] (8 regs x ``hbm_lanes`` words)."""
+    return (K_GRF_A << 24) | (int(i) & 7)
+
+
+def grf_b(i: int) -> int:
+    """Vector register GRF_B[i]."""
+    return (K_GRF_B << 24) | (int(i) & 7)
+
+
+def srf(i: int) -> int:
+    """Scalar register SRF[i], broadcast across the SIMD lanes."""
+    return (K_SRF << 24) | (int(i) & 7)
+
+
+class CrfProgram:
+    """Builder for a CRF command stream.
+
+    ``jump(target, times)`` re-enters ``target`` ``times`` extra trips
+    (total body iterations = ``times + 1`` when the jump is backward to
+    the body start); the single hardware loop counter means jumps don't
+    nest.  ``here()`` is the next slot index — take it before emitting a
+    loop body to get the jump target."""
+
+    def __init__(self):
+        self._ops = []
+
+    def _emit(self, op: CmdOp, rd=0, ra=0, rb=0, imm=0) -> int:
+        self._ops.append((int(op), int(rd), int(ra), int(rb), int(imm)))
+        return len(self._ops) - 1
+
+    def here(self) -> int:
+        return len(self._ops)
+
+    @property
+    def n_instrs(self) -> int:
+        return len(self._ops)
+
+    def nop(self):
+        return self._emit(CmdOp.NOP)
+
+    def mov(self, dst: int, src: int):
+        return self._emit(CmdOp.MOV, dst, src)
+
+    def fill(self, dst: int, src: int):
+        return self._emit(CmdOp.FILL, dst, src)
+
+    def add(self, dst: int, a: int, b: int):
+        return self._emit(CmdOp.ADD, dst, a, b)
+
+    def mul(self, dst: int, a: int, b: int):
+        return self._emit(CmdOp.MUL, dst, a, b)
+
+    def mac(self, dst: int, a: int, b: int):
+        return self._emit(CmdOp.MAC, dst, a, b)
+
+    def jump(self, target: int, times: int):
+        return self._emit(CmdOp.JUMP, ra=int(times), imm=int(target))
+
+    def exit_(self):
+        return self._emit(CmdOp.EXIT)
+
+    def binary(self, capacity: int) -> isa.Binary:
+        """Pack into an :class:`isa.Binary` image of ``capacity`` slots.
+
+        Padding slots are ``EXIT`` (not the uPIM assembler's ``STOP``,
+        which is outside the CRF opcode range), so a fall-through off the
+        program end terminates cleanly."""
+        n = len(self._ops)
+        cap = max(int(capacity), n)
+        opcode = np.full(cap, int(CmdOp.EXIT), np.int32)
+        rd = np.zeros(cap, np.int32)
+        ra = np.zeros(cap, np.int32)
+        rb = np.zeros(cap, np.int32)
+        imm = np.zeros(cap, np.int32)
+        use_imm = np.zeros(cap, np.int32)
+        for i, (op, d, a, b, m) in enumerate(self._ops):
+            opcode[i], rd[i], ra[i], rb[i], imm[i] = op, d, a, b, m
+        return isa.Binary(opcode, rd, ra, rb, imm, use_imm, n, {})
+
+
+# ---------------------------------------------------------------------------
+# native command-stream engine (vectorized over DPUs=banks)
+# ---------------------------------------------------------------------------
+
+
+def make_cmd_state_np(cfg: DPUConfig, binary, wram_init, mram_init,
+                      n_threads: int = 1) -> Dict:
+    """Initial all-bank state.  ``wram_init``'s first 8 columns seed the
+    SRF (the host broadcasts scalars there, mirroring the real part's
+    mode-register writes); the full UPMEM counter set is carried (zeros
+    where the concept doesn't apply) so ``stats.report_from_state`` and
+    the compile cache's padding/readback work unchanged."""
+    D = cfg.n_dpus
+    W = cfg.hbm_lanes
+    T = n_threads or 1
+    srf0 = np.zeros((D, 8), np.int32)
+    w = np.asarray(wram_init, np.int32)
+    if w.size:
+        k = min(8, w.shape[1])
+        srf0[:, :k] = w[:, :k]
+    return {
+        "cycle": np.zeros(D, np.int32),
+        "pc": np.zeros(D, np.int32),
+        "status": np.full((D, 1), engine.RUN, np.int32),
+        "loop_left": np.full(D, -1, np.int32),
+        "open_row": np.full(D, -1, np.int32),
+        "grf_a": np.zeros((D, 8, W), np.int32),
+        "grf_b": np.zeros((D, 8, W), np.int32),
+        "srf": srf0,
+        "mram": np.asarray(mram_init, np.int32),
+        # counters (UPMEM-compatible so KernelReport works unchanged)
+        "c_active": np.zeros(D, np.int32),
+        "c_idle_mem": np.zeros(D, np.int32),
+        "c_idle_rev": np.zeros(D, np.int32),
+        "c_idle_rf": np.zeros(D, np.int32),
+        "c_issued": np.zeros(D, np.int32),
+        "c_cls": np.zeros((D, 6), np.int32),
+        "c_hist": np.zeros((D, T + 1), np.int32),
+        "c_dma_rd": np.zeros(D, np.int32),
+        "c_dma_wr": np.zeros(D, np.int32),
+        "c_dma_rd_bytes": np.zeros(D, np.float32),
+        "c_dma_wr_bytes": np.zeros(D, np.float32),
+        "c_row_hit": np.zeros(D, np.int32),
+        "c_row_miss": np.zeros(D, np.int32),
+        "c_tlb_hit": np.zeros(D, np.int32),
+        "c_tlb_miss": np.zeros(D, np.int32),
+        "c_dc_hit": np.zeros(D, np.int32),
+        "c_dc_miss": np.zeros(D, np.int32),
+        "c_acq_retry": np.zeros(D, np.int32),
+        "ts_buf": np.zeros((D, cfg.timeseries_len), np.float32),
+        "ts_acc": np.zeros(D, np.float32),
+    }
+
+
+def make_cmd_step(cfg: DPUConfig):
+    """Traced ``(ir, state) -> state``: one CRF command per bank per
+    iteration (``cycle`` advances by the command's full service time, so
+    while-loop trips != cycles).
+
+    Timing per command: 1 issue cycle, plus for every BANK operand an
+    open-row term (``row_hit_overhead`` on the open row, else
+    ``row_miss_overhead``) and the burst transfer of ``hbm_lanes`` words
+    at the coalesced all-bank bandwidth."""
+    W = cfg.hbm_lanes
+    hit_ovh = int(cfg.row_hit_overhead)
+    miss_ovh = int(cfg.row_miss_overhead)
+    xfer = max(1, int(np.ceil(
+        (W * 4) / (cfg.effective_mram_bw * cfg.coalesced_bw_mult))))
+
+    def step(ir, st):
+        opc, rd_v, ra_v, rb_v, imm_v, _ = ir
+        D = st["cycle"].shape[0]
+        M = st["mram"].shape[1]
+        d = jnp.arange(D)
+        lanes = jnp.arange(W)
+        pc = jnp.clip(st["pc"], 0, opc.shape[0] - 1)
+        op, dst, a, b, tgt = opc[pc], rd_v[pc], ra_v[pc], rb_v[pc], imm_v[pc]
+        run_m = st["status"][:, 0] == engine.RUN
+
+        is_jump = op == CmdOp.JUMP
+        is_exit = op == CmdOp.EXIT
+        is_mov = (op == CmdOp.MOV) | (op == CmdOp.FILL)
+        is_add = op == CmdOp.ADD
+        is_mul = op == CmdOp.MUL
+        is_mac = op == CmdOp.MAC
+        is_compute = is_mov | is_add | is_mul | is_mac
+        uses_b = is_add | is_mul | is_mac
+
+        def read(code):
+            kind = code >> 24
+            idx = code & _IDX_MASK
+            cols = jnp.clip(idx[:, None] * W + lanes, 0, M - 1)
+            v_bank = st["mram"][d[:, None], cols]
+            r = idx & 7
+            v = jnp.where((kind == K_GRF_A)[:, None], st["grf_a"][d, r],
+                jnp.where((kind == K_GRF_B)[:, None], st["grf_b"][d, r],
+                jnp.where((kind == K_SRF)[:, None],
+                          jnp.broadcast_to(st["srf"][d, r][:, None], (D, W)),
+                          v_bank)))
+            return v
+
+        va, vb, vd = read(a), read(b), read(dst)
+        res = jnp.where(is_mov[:, None], va,
+              jnp.where(is_add[:, None], va + vb,
+              jnp.where(is_mul[:, None], va * vb, vd + va * vb)))
+
+        # ---- open-row timing over the command's bank-access sequence --------
+        def access(carry, code, active, is_write):
+            open_row, cost, n_rd, n_wr, n_hit, n_miss, any_bank = carry
+            kind = code >> 24
+            row = code & _IDX_MASK
+            bk = active & (kind == K_BANK) & run_m
+            hit = bk & (row == open_row)
+            cost = cost + jnp.where(
+                bk, jnp.where(hit, hit_ovh, miss_ovh) + xfer, 0)
+            open_row = jnp.where(bk, row, open_row)
+            n_rd = n_rd + (bk & ~is_write).astype(jnp.int32)
+            n_wr = n_wr + (bk & is_write).astype(jnp.int32)
+            n_hit = n_hit + hit.astype(jnp.int32)
+            n_miss = n_miss + (bk & ~hit).astype(jnp.int32)
+            return (open_row, cost, n_rd, n_wr, n_hit, n_miss, any_bank | bk)
+
+        z = jnp.zeros(D, jnp.int32)
+        f = jnp.zeros(D, bool)
+        carry = (st["open_row"], z, z, z, z, z, f)
+        carry = access(carry, a, is_compute, False)
+        carry = access(carry, b, uses_b, False)
+        carry = access(carry, dst, is_compute, True)
+        open_row, cost, n_rd, n_wr, n_hit, n_miss, any_bank = carry
+
+        # ---- writeback by destination kind (drop-index when inactive) -------
+        wmask = run_m & is_compute
+        dkind = dst >> 24
+        didx = dst & _IDX_MASK
+        cols = didx[:, None] * W + lanes
+        cols = jnp.where((wmask & (dkind == K_BANK))[:, None], cols, M)
+        mram = st["mram"].at[d[:, None], cols].set(res, mode="drop")
+        ri_a = jnp.where(wmask & (dkind == K_GRF_A), didx & 7, 8)
+        grf_a_n = st["grf_a"].at[d, ri_a].set(res, mode="drop")
+        ri_b = jnp.where(wmask & (dkind == K_GRF_B), didx & 7, 8)
+        grf_b_n = st["grf_b"].at[d, ri_b].set(res, mode="drop")
+        ri_s = jnp.where(wmask & (dkind == K_SRF), didx & 7, 8)
+        srf_n = st["srf"].at[d, ri_s].set(res[:, 0], mode="drop")
+
+        # ---- control flow ----------------------------------------------------
+        ll = st["loop_left"]
+        remaining = jnp.where(ll >= 0, ll, a)     # JUMP.ra = raw trip count
+        take = is_jump & run_m & (remaining > 0)
+        ll_n = jnp.where(is_jump & run_m,
+                         jnp.where(take, remaining - 1, -1), ll)
+        pc_n = jnp.where(run_m, jnp.where(take, tgt, st["pc"] + 1), st["pc"])
+        status = jnp.where((run_m & is_exit)[:, None], engine.DONE,
+                           st["status"])
+
+        service = jnp.where(run_m, 1 + cost, 0)
+        cls_sel = jnp.where(any_bank, isa.CLS_DMA,
+                  jnp.where(is_compute, isa.CLS_ALU, isa.CLS_CTRL))
+        run_i = run_m.astype(jnp.int32)
+        burst = jnp.float32(W * 4)
+
+        new = dict(st)
+        new.update(
+            cycle=st["cycle"] + service,
+            pc=pc_n, status=status, loop_left=ll_n,
+            open_row=jnp.where(run_m, open_row, st["open_row"]),
+            grf_a=grf_a_n, grf_b=grf_b_n, srf=srf_n, mram=mram,
+            c_active=st["c_active"] + run_i,
+            c_idle_mem=st["c_idle_mem"] + jnp.where(run_m, cost, 0),
+            c_issued=st["c_issued"]
+            + jnp.where(run_m, jnp.where(is_compute, W, 1), 0),
+            c_cls=st["c_cls"].at[d, cls_sel].add(run_i),
+            c_hist=st["c_hist"].at[:, 1].add(run_i),
+            c_dma_rd=st["c_dma_rd"] + n_rd,
+            c_dma_wr=st["c_dma_wr"] + n_wr,
+            c_dma_rd_bytes=st["c_dma_rd_bytes"]
+            + n_rd.astype(jnp.float32) * burst,
+            c_dma_wr_bytes=st["c_dma_wr_bytes"]
+            + n_wr.astype(jnp.float32) * burst,
+            c_row_hit=st["c_row_hit"] + n_hit,
+            c_row_miss=st["c_row_miss"] + n_miss,
+        )
+        return new
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class AllBankBackend(backends.ExecBackend):
+    """Compat all-bank target: unmodified uPIM binaries in SIMD lockstep.
+
+    The whole tasklet set becomes one warp (``simt_width = n_threads``)
+    with DMA coalescing forced on — the SIMT engine then models exactly
+    the all-bank execution discipline: one shared front-end, min-PC
+    reconvergence on divergence, bursts coalesced across the full SIMD
+    width.  The compile-cache key normalizes ``simt_width``/``coalescing``
+    away (the warp width is the launch's ``n_threads``, already keyed),
+    so every MIMD config maps onto the same all-bank executables."""
+
+    name = "hbmpim"
+
+    @staticmethod
+    def _allbank_cfg(cfg: DPUConfig, n_threads: int) -> DPUConfig:
+        return cfg.replace(simt_width=n_threads, coalescing=True)
+
+    def make_state(self, cfg, binary, wram_init, mram_init, n_threads):
+        return simt.make_state_np(self._allbank_cfg(cfg, n_threads), binary,
+                                  wram_init, mram_init, n_threads)
+
+    def step_driver(self, cfg, n_threads):
+        cfg2 = self._allbank_cfg(cfg, n_threads)
+        return simt.make_step_traced(cfg2), engine.make_cond(cfg2)
+
+    def static_key(self, cfg):
+        return cfg.replace(simt_width=0, coalescing=True).static_key()
+
+
+class CmdBackend(backends.ExecBackend):
+    """Native bank-level CRF command-stream target (see module docs).
+
+    State has no per-tasklet axis, so the engine-family lane masking is
+    overridden; launch through :func:`launch_commands` (the generic
+    ``PIMSystem.launch`` builds uPIM WRAM images this model has no use
+    for)."""
+
+    name = "hbmpim_cmd"
+
+    def validate(self, cfg, binary, n_threads):
+        if binary.n_instrs > cfg.hbm_crf_slots:
+            raise AssertionError(
+                f"CRF program of {binary.n_instrs} commands exceeds "
+                f"hbm_crf_slots={cfg.hbm_crf_slots}")
+
+    def make_state(self, cfg, binary, wram_init, mram_init, n_threads):
+        return make_cmd_state_np(cfg, binary, wram_init, mram_init, n_threads)
+
+    def step_driver(self, cfg, n_threads):
+        return make_cmd_step(cfg), engine.make_cond(cfg)
+
+    def pad_lanes(self, cfg, st, logical_d):
+        st["status"][logical_d:] = engine.DONE
+
+    def set_ndpus(self, st, logical_d, ndpus_reg):
+        pass  # no N_DPUS register in the command model
+
+    def finish_all(self, st):
+        st["status"][:] = engine.DONE
+
+
+def launch_commands(system, name: str, prog: CrfProgram, mram: np.ndarray,
+                    srf_init: Optional[np.ndarray] = None):
+    """Run one CRF program all-bank on ``system`` and charge its timeline.
+
+    ``mram``: (D, mram_words) int32 bank images, rows = ``hbm_lanes``-word
+    bursts addressed by :func:`bank`.  ``srf_init``: (D, 8) (or (8,),
+    broadcast) int32 SRF seed — the host-written scalars.  Returns
+    ``(final_state, KernelReport)`` exactly like ``PIMSystem.launch``,
+    with the kernel charged to the timeline and appended to
+    ``system.reports``; thread the returned ``st["mram"]`` into the next
+    launch to accumulate across chunks."""
+    from repro.core import compile_cache
+
+    cfg = system.cfg
+    D = cfg.n_dpus
+    mram = np.ascontiguousarray(np.asarray(mram, np.int32))
+    if mram.shape[0] != D:
+        raise ValueError(f"{name}: mram must carry one row per DPU "
+                         f"(want {D}, got {mram.shape[0]})")
+    if srf_init is None:
+        srf_init = np.zeros((D, 8), np.int32)
+    srf_init = np.asarray(srf_init, np.int32)
+    if srf_init.ndim == 1:
+        srf_init = np.broadcast_to(srf_init, (D, srf_init.shape[0]))
+    binary = prog.binary(cfg.hbm_crf_slots)
+    st = compile_cache.run(cfg, binary, srf_init, mram, n_threads=1,
+                           backend="hbmpim_cmd")
+    if (st["status"] != engine.DONE).any():
+        raise RuntimeError(
+            f"{name}: command stream hit max_cycles={cfg.max_cycles}")
+    rep = backends.get("hbmpim_cmd").report(name, cfg, st, 1)
+    system._charge_kernel(name, rep.kernel_seconds)
+    system.reports.append(rep)
+    return st, rep
+
+
+backends.register(AllBankBackend())
+backends.register(CmdBackend())

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.comm.fabric import Fabric, make_fabric
 from repro.comm.topology import RankTopology, TransferEvent
-from repro.core import engine, simt, stats
+from repro.core import backend as backends
+from repro.core import engine, stats
 from repro.core.asm import ARG_BYTES, CACHE_DATA_BASE, Program
 from repro.core.config import DPUConfig
 from repro.core.isa import Binary
@@ -40,6 +41,17 @@ from repro.sched import queue as sq
 from repro.sched import scheduler as ssched
 
 PHASES = ("h2d", "kernel", "d2h", "inter_dpu", "retry")
+
+
+def _xfer_spec(direction: str, bytes_per_dpu) -> Dict:
+    """Recorder metadata for one host transfer: the per-DPU byte request
+    (scalar or vector) a replay feeds back through a — possibly different
+    — ``RankTopology.schedule`` to re-price it."""
+    if np.ndim(bytes_per_dpu) == 0:
+        spec = float(bytes_per_dpu)
+    else:
+        spec = [float(b) for b in np.asarray(bytes_per_dpu).ravel()]
+    return {"price": "xfer", "dir": direction, "bytes": spec}
 
 
 @dataclass
@@ -144,6 +156,9 @@ class PIMSystem:
             raise ValueError(f"unknown recovery policy {recovery!r} "
                              "(want remap|raise)")
         self.cfg = cfg
+        #: optional repro.trace.TraceRecorder (attach via trace.record());
+        #: None = zero-cost, every emission site is guarded
+        self.recorder = None
         self.tracer = tracer if tracer is not None else get_default_tracer()
         if self.tracer is not None:
             self.tracer.attach_system(self)
@@ -207,14 +222,20 @@ class PIMSystem:
     # ---- command-queue plumbing ---------------------------------------------
     def _submit(self, kind: str, phase: str, label: str, seconds: float,
                 nbytes: float, resources: Dict[str, float],
-                attempt: int = 0) -> "sq.Command":
+                attempt: int = 0, meta: Optional[Dict] = None
+                ) -> "sq.Command":
         """Charge the timeline (eager, serialized-order sums) and queue the
-        command for the overlapped schedule."""
+        command for the overlapped schedule.  ``meta`` is the re-pricing
+        spec a :class:`repro.trace.TraceRecorder` stores with the command
+        (how its seconds were derived) — never read by the simulation."""
         self._invalidate_schedule()
         self.timeline.add(phase, seconds, label, nbytes)
-        return self.runtime.submit(kind, label or phase, seconds,
-                                   phase=phase, nbytes=nbytes,
-                                   resources=resources, attempt=attempt)
+        cmd = self.runtime.submit(kind, label or phase, seconds,
+                                  phase=phase, nbytes=nbytes,
+                                  resources=resources, attempt=attempt)
+        if self.recorder is not None:
+            self.recorder.on_command(cmd, meta)
+        return cmd
 
     def _charge_retry(self, kind: str, label: str, seconds: float,
                       resources: Dict[str, float], attempt: int,
@@ -225,9 +246,12 @@ class PIMSystem:
         goodput."""
         self._invalidate_schedule()
         self.timeline.add("retry", seconds, label, nbytes)
-        return self.runtime.submit(kind, label, seconds, phase="retry",
-                                   nbytes=nbytes, resources=resources,
-                                   wasted=seconds, attempt=attempt)
+        cmd = self.runtime.submit(kind, label, seconds, phase="retry",
+                                  nbytes=nbytes, resources=resources,
+                                  wasted=seconds, attempt=attempt)
+        if self.recorder is not None:
+            self.recorder.on_command(cmd, None)
+        return cmd
 
     def _invalidate_schedule(self):
         # a schedule resolved by sync() no longer covers newly submitted
@@ -276,12 +300,18 @@ class PIMSystem:
         """Completion marker for everything submitted so far on the
         current stream."""
         self._invalidate_schedule()
-        return self.runtime.record_event(label)
+        ev = self.runtime.record_event(label)
+        if self.recorder is not None:
+            self.recorder.on_event_record(ev)
+        return ev
 
     def wait_event(self, ev: "sq.Event") -> "sq.Command":
         """Block the current stream until ``ev``'s recorder finishes."""
         self._invalidate_schedule()
-        return self.runtime.wait_event(ev)
+        cmd = self.runtime.wait_event(ev)
+        if self.recorder is not None:
+            self.recorder.on_command(cmd, None)
+        return cmd
 
     def sync(self) -> "ssched.Schedule":
         """Resolve all queued commands into the overlapped schedule and
@@ -292,6 +322,8 @@ class PIMSystem:
                                 contention=self.cfg.channel_contention)
         self.timeline.elapsed = sched.makespan
         self.last_schedule = sched
+        if self.recorder is not None:
+            self.recorder.on_sync()
         if self.tracer is not None:
             # re-ingest under this system's key: sync() re-resolves the
             # whole submission history, so replacement keeps the trace
@@ -304,21 +336,27 @@ class PIMSystem:
     def h2d(self, bytes_per_dpu, label: str = "h2d") -> "sq.Command":
         """Host write; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "h2d")
-        return self._transfer(sq.H2D, "h2d", label, ev)
+        return self._transfer(sq.H2D, "h2d", label, ev,
+                              spec=_xfer_spec("h2d", bytes_per_dpu))
 
     def d2h(self, bytes_per_dpu, label: str = "d2h") -> "sq.Command":
         """Host read; scalar or (D,) per-DPU byte vector."""
         ev = self.topology.schedule(bytes_per_dpu, "d2h")
-        return self._transfer(sq.D2H, "d2h", label, ev)
+        return self._transfer(sq.D2H, "d2h", label, ev,
+                              spec=_xfer_spec("d2h", bytes_per_dpu))
 
     def _transfer(self, kind: str, phase: str, label: str,
-                  ev: TransferEvent) -> "sq.Command":
+                  ev: TransferEvent,
+                  spec: Optional[Dict] = None) -> "sq.Command":
         """Submit one host transfer, retrying link timeouts and pricing
-        link degradation when a fault plan is installed."""
+        link degradation when a fault plan is installed.  ``spec`` is the
+        recorder's re-pricing metadata; fault-degraded attempts drop it
+        (their seconds carry a sampled factor a replay cannot re-derive,
+        so they replay as recorded)."""
         res = self._chan_resources(ev)
         if self.faults is None:
             return self._submit(kind, phase, label, ev.seconds,
-                                ev.total_bytes, res)
+                                ev.total_bytes, res, meta=spec)
         xfer = self._xfer_idx
         self._xfer_idx += 1
         policy = self.retry or DEFAULT_POLICY
@@ -358,14 +396,19 @@ class PIMSystem:
                    "attempts"))
 
     def collective(self, kind: str, seconds: float, nbytes: float,
-                   ranks: Optional[Sequence[int]] = None) -> "sq.Command":
+                   ranks: Optional[Sequence[int]] = None,
+                   price: Optional[Dict] = None) -> "sq.Command":
         """Charge one inter-DPU collective exchange (called by
         ``repro.comm.collectives`` after it moved the payload).
         ``ranks`` restricts the held link/fabric shares to the
         participating ranks (default: all), letting collectives on
-        disjoint rank sets overlap in an async schedule."""
+        disjoint rank sets overlap in an async schedule.  ``price`` is
+        the fabric-call spec (method name + args + DPU subset) a trace
+        replay uses to re-price this exchange under another fabric."""
+        meta = dict(price, price="collective") if price else None
         return self._submit(sq.COLLECTIVE, "inter_dpu", kind, seconds, nbytes,
-                            self._fabric_resources(seconds, ranks))
+                            self._fabric_resources(seconds, ranks),
+                            meta=meta)
 
     def inter_dpu(self, bytes_per_dpu: float):
         """Legacy host bounce: ``bytes_per_dpu`` is the worst-case per-DPU
@@ -373,16 +416,23 @@ class PIMSystem:
         channel). Prefer the ``repro.comm`` collectives, which account
         exact per-DPU vectors."""
         self.collective("bounce", self.fabric.bounce(bytes_per_dpu),
-                        bytes_per_dpu)
+                        bytes_per_dpu,
+                        price={"method": "bounce",
+                               "args": [float(bytes_per_dpu)],
+                               "dpus": None})
 
     def _charge_kernel(self, name: str, seconds: float,
                        ranks: Optional[Sequence[int]] = None
                        ) -> "sq.Command":
         """Charge one successful kernel: hold the involved ranks' compute
         slots (no fault handling — the caller already resolved that)."""
+        meta = {"price": "kernel", "freq_mhz": self.cfg.freq_mhz,
+                "ranks": None if ranks is None
+                else [int(r) for r in self._ranks_or_all(ranks)]}
         return self._submit(
             sq.LAUNCH, "kernel", name, seconds, 0.0,
-            {f"rank{r}": seconds for r in self._ranks_or_all(ranks)})
+            {f"rank{r}": seconds for r in self._ranks_or_all(ranks)},
+            meta=meta)
 
     def modeled_launch(self, name: str, seconds: float,
                        ranks: Optional[Sequence[int]] = None
@@ -531,17 +581,18 @@ class PIMSystem:
             full[:, :wram.shape[1]] = wram
             full[:, base:] = wram_extra
             wram = full
-        if cfg.simt_width > 0:
-            st = simt.run(cfg, binary, wram, mram, n_threads=T,
-                          ndpus_reg=ndpus_reg)
-        else:
-            st = engine.run(cfg, binary, wram, mram, n_threads=T,
-                            ndpus_reg=ndpus_reg)
+        # one backend-neutral entry: the registered ExecBackend resolved
+        # from cfg (explicit cfg.backend, else the simt_width default)
+        # simulates the kernel and aggregates its own report
+        be = backends.get(backends.resolve_backend(cfg))
+        from repro.core import compile_cache
+        st = compile_cache.run(cfg, binary, wram, mram, n_threads=T,
+                               ndpus_reg=ndpus_reg)
         if (st["status"] != engine.DONE).any():
             raise RuntimeError(
                 f"{name}: kernel hit max_cycles={cfg.max_cycles} "
                 f"(status={np.unique(st['status'])})")
-        rep = stats.report_from_state(name, cfg, st, T)
+        rep = be.report(name, cfg, st, T)
         return st, rep, ranks
 
     def _launch_faulty(self, name: str, binary: Binary, args, mram, T: int,

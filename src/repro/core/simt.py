@@ -313,9 +313,10 @@ def make_step(cfg: DPUConfig, binary):
 
 def run(cfg: DPUConfig, binary, wram_init, mram_init, n_threads=None,
         ndpus_reg=None):
-    assert cfg.simt_width > 0
-    T = n_threads or cfg.n_tasklets
-    assert T % cfg.simt_width == 0, "n_tasklets must be a multiple of warp width"
+    """Simulate on the ``"simt"`` :class:`repro.core.backend.ExecBackend`
+    (its ``validate`` enforces ``simt_width > 0`` and warp-divisible
+    tasklet counts) through the compiled-engine cache."""
     from repro.core import compile_cache
-    return compile_cache.run(cfg, binary, wram_init, mram_init, n_threads=T,
-                             backend="simt", ndpus_reg=ndpus_reg)
+    return compile_cache.run(cfg, binary, wram_init, mram_init,
+                             n_threads=n_threads, backend="simt",
+                             ndpus_reg=ndpus_reg)

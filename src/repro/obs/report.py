@@ -174,11 +174,62 @@ def render(trace: Dict[str, Any], profile: Optional[Dict[str, Any]] = None,
     return "\n".join(lines)
 
 
+def render_command_trace(records: List[Dict[str, Any]],
+                         top: int = 10) -> str:
+    """Text report for a ``repro.trace`` command-stream JSONL (recorded
+    at the ``PIMSystem._submit`` seam): per-phase busy/bytes breakdown,
+    heaviest labels, and how much of the stream carries a re-pricing
+    spec (i.e. is re-priceable by ``repro.trace.replay`` under another
+    fabric/topology config rather than replayed as recorded)."""
+    header = records[0]
+    cmds = [r for r in records[1:] if r.get("type") == "cmd"]
+    syncs = sum(1 for r in records[1:] if r.get("type") == "sync")
+    cfg = header.get("cfg", {})
+    lines = [
+        f"== command trace v{header.get('version')}: {len(cmds)} commands, "
+        f"{syncs} sync(s), mode={header.get('mode')} ==",
+        f"config: n_dpus={cfg.get('n_dpus')} n_ranks={cfg.get('n_ranks')} "
+        f"n_channels={cfg.get('n_channels')} fabric={cfg.get('fabric')!r} "
+        f"freq_mhz={cfg.get('freq_mhz')} backend={cfg.get('backend')!r}",
+    ]
+    lines.append("\n-- phase breakdown --")
+    lines.append(f"{'phase':<10} {'count':>6} {'busy':>12} {'bytes':>14}")
+    phases: Dict[str, List[float]] = {}
+    for c in cmds:
+        if c.get("phase"):
+            cur = phases.setdefault(c["phase"], [0, 0.0, 0.0])
+            cur[0] += 1
+            cur[1] += c["seconds"]
+            cur[2] += c.get("nbytes", 0.0)
+    for phase in sorted(phases):
+        cnt, busy, nb = phases[phase]
+        lines.append(f"{phase:<10} {int(cnt):>6d} {_fmt_s(busy):>12} "
+                     f"{nb:>14,.0f}")
+    lines.append(f"\n-- top {top} labels by busy time --")
+    lines.append(f"{'label':<32} {'count':>6} {'busy':>12}")
+    agg: Dict[str, List[float]] = {}
+    for c in cmds:
+        cur = agg.setdefault(c.get("label") or c["kind"], [0, 0.0])
+        cur[0] += 1
+        cur[1] += c["seconds"]
+    rows = sorted(agg.items(), key=lambda kv: (-kv[1][1], kv[0]))[:top]
+    for label, (cnt, busy) in rows:
+        lines.append(f"{label:<32} {int(cnt):>6d} {_fmt_s(busy):>12}")
+    priced = sum(1 for c in cmds if c.get("meta"))
+    timed = sum(1 for c in cmds if c["seconds"] > 0)
+    lines.append(f"\nre-priceable: {priced}/{timed} timed commands carry a "
+                 "pricing spec (the rest replay as recorded)")
+    queues = sorted({c["queue"] for c in cmds})
+    lines.append(f"queues: {', '.join(queues)}")
+    return "\n".join(lines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("trace", help="Chrome-trace JSON (Tracer.save output)")
+    ap.add_argument("trace", help="Chrome-trace JSON (Tracer.save output) "
+                                  "or a repro.trace command-stream JSONL")
     ap.add_argument("--profile", default=None,
                     help="RunProfile JSON snapshot (counters + kernels)")
     ap.add_argument("--top", type=int, default=10,
@@ -188,7 +239,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "Prometheus text exposition")
     args = ap.parse_args(argv)
     with open(args.trace) as f:
-        trace = json.load(f)
+        text = f.read()
+    try:
+        trace = json.loads(text)
+    except json.JSONDecodeError:
+        trace = None
+    if trace is None or (isinstance(trace, dict)
+                         and trace.get("type") == "header"):
+        # repro.trace command-stream JSONL (one JSON record per line)
+        records = [json.loads(line) for line in text.splitlines()
+                   if line.strip()]
+        if not records or records[0].get("type") != "header":
+            raise SystemExit(f"{args.trace}: neither a Chrome trace nor a "
+                             "command-stream JSONL")
+        print(render_command_trace(records, top=args.top))
+        return 0
     profile = None
     if args.profile:
         with open(args.profile) as f:

@@ -1,5 +1,6 @@
 """PrIM-style workload registry (paper Table II + the SSORT
 distributed sample sort, the alltoall pathfinding workload)."""
+from repro.workloads.gemv_stream import GEMVS
 from repro.workloads.graph import BFS, NW
 from repro.workloads.histo import HST_L, HST_S
 from repro.workloads.linalg import GEMV, MLP, SpMV, TRNS
@@ -9,7 +10,7 @@ from repro.workloads.streaming import RED, SCAN_RSS, SCAN_SSA, SEL, UNI, VA
 
 ALL = {
     w.name: w for w in (
-        BFS(), BS(), GEMV(), HST_L(), HST_S(), MLP(), NW(), RED(),
+        BFS(), BS(), GEMV(), GEMVS(), HST_L(), HST_S(), MLP(), NW(), RED(),
         SCAN_RSS(), SCAN_SSA(), SEL(), SpMV(), SSORT(), TRNS(), TS(),
         UNI(), VA(),
     )

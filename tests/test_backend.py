@@ -1,0 +1,95 @@
+"""ExecBackend seam: registry mechanics, default resolution, and
+bit-exactness pins vs. the pre-refactor dispatch.
+
+The golden numbers were captured on the commit *before* the backend
+extraction (string-dispatch ``compile_cache``/``host``): the seam must
+not change a single simulated value."""
+import pytest
+
+from repro.core import backend as backends
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.workloads import get
+
+# (workload, cfg kwargs, n_threads) -> pre-refactor goldens
+GOLDENS = {
+    # cycles, issued, timeline.total, timeline.kernel
+    "VA-scalar": (5336, 11488, 4.131521235521236e-05,
+                  1.5245714285714286e-05),
+    "VA-simt": (2133, 11488, 3.216378378378378e-05,
+                6.094285714285714e-06),
+    "BFS-scalar": (68900, 30916, 0.00027344401544401544,
+                   0.00019685714285714285),
+}
+
+
+def _cfg(**kw):
+    return DPUConfig(n_dpus=4, n_ranks=2, n_channels=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_engine_families():
+    assert backends.get("scalar").name == "scalar"
+    assert backends.get("simt").name == "simt"
+    for name in ("scalar", "simt", "hbmpim", "hbmpim_cmd"):
+        assert name in backends.names()
+
+
+def test_unknown_backend_lists_names():
+    with pytest.raises(KeyError) as e:
+        backends.get("nope")
+    assert "scalar" in str(e.value) and "hbmpim" in str(e.value)
+
+
+def test_resolve_backend_precedence():
+    # explicit argument > cfg.backend > simt_width default
+    cfg = _cfg()
+    assert backends.resolve_backend(cfg) == "scalar"
+    assert backends.resolve_backend(cfg.replace(simt_width=4)) == "simt"
+    assert backends.resolve_backend(cfg.replace(backend="hbmpim")) == "hbmpim"
+    assert backends.resolve_backend(
+        cfg.replace(backend="hbmpim", simt_width=4)) == "hbmpim"
+    assert backends.resolve_backend(
+        cfg.replace(backend="hbmpim"), "scalar") == "scalar"
+
+
+def test_lazy_hbmpim_registration():
+    be = backends.get("hbmpim_cmd")
+    assert be.name == "hbmpim_cmd"
+
+
+def test_cfg_backend_not_in_static_key():
+    # the backend name is keyed explicitly by the compile cache; the
+    # config's static identity must not fork on it
+    cfg = _cfg()
+    assert cfg.static_key() == cfg.replace(backend="hbmpim").static_key()
+
+
+def test_simt_backend_validates_width():
+    be = backends.get("simt")
+    with pytest.raises(AssertionError):
+        be.validate(_cfg(), None, 8)            # simt_width == 0
+    with pytest.raises(AssertionError):
+        be.validate(_cfg(simt_width=3), None, 8)  # 8 % 3 != 0
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness pins (pre-refactor goldens)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(GOLDENS))
+def test_bit_exact_vs_pre_refactor(name):
+    wl_name, be = name.split("-")
+    kw = {"simt_width": 4} if be == "simt" else {}
+    system = PIMSystem(_cfg(**kw))
+    _, rep = get(wl_name).run(system, 8, scale=0.02, seed=0)
+    cycles, issued, total, kernel = GOLDENS[name]
+    assert rep.cycles == cycles
+    assert rep.issued == issued
+    assert system.timeline.total == total
+    assert system.timeline.kernel == kernel

@@ -1,0 +1,153 @@
+"""Trace record/replay: unchanged-config bit-exactness, what-if
+re-pricing, JSONL round-trip, and the obs report rendering."""
+import json
+
+import pytest
+
+from repro import trace
+from repro.core.config import DPUConfig
+from repro.core.host import PIMSystem
+from repro.workloads import get
+
+
+def _cfg(**kw):
+    kw = {"n_dpus": 4, "n_ranks": 2, "n_channels": 2, **kw}
+    return DPUConfig(**kw)
+
+
+def _traced_run(wl_name, mode="inorder", cfg=None):
+    system = PIMSystem(cfg or _cfg(), mode=mode)
+    rec = trace.record(system)
+    get(wl_name).run(system, 8, scale=0.02, seed=0)
+    system.sync()
+    return system, rec
+
+
+def _assert_bit_exact(live, replayed):
+    assert replayed.events == live.events
+    assert replayed.h2d == live.h2d
+    assert replayed.kernel == live.kernel
+    assert replayed.d2h == live.d2h
+    assert replayed.inter_dpu == live.inter_dpu
+    assert replayed.retry == live.retry
+    assert replayed.total == live.total
+    assert replayed.elapsed == live.elapsed
+
+
+# ---------------------------------------------------------------------------
+# unchanged-config replay is bit-exact (the PR's core acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["inorder", "async"])
+@pytest.mark.parametrize("wl_name", ["BFS", "SSORT"])
+def test_replay_unchanged_config_bit_exact(wl_name, mode):
+    system, rec = _traced_run(wl_name, mode=mode)
+    res = trace.replay(rec.records)
+    _assert_bit_exact(system.timeline, res.timeline)
+    assert res.schedule is not None
+    assert res.schedule.makespan == system.last_schedule.makespan
+
+
+def test_replay_bit_exact_through_jsonl_file(tmp_path):
+    system, rec = _traced_run("BFS")
+    path = tmp_path / "bfs.jsonl"
+    n = rec.save(path)
+    assert n == len(rec.records)
+    res = trace.replay(str(path))
+    _assert_bit_exact(system.timeline, res.timeline)
+
+
+# ---------------------------------------------------------------------------
+# what-if re-pricing
+# ---------------------------------------------------------------------------
+
+
+def test_replay_other_fabric_reprices_collectives():
+    system, rec = _traced_run("BFS")
+    res = trace.replay(rec.records, cfg=_cfg(fabric="direct"))
+    assert res.n_commands == len([r for r in rec.records
+                                  if r.get("type") == "cmd"])
+    assert res.timeline.inter_dpu != system.timeline.inter_dpu
+    # kernels were NOT re-simulated: identical seconds ride along
+    assert res.timeline.kernel == system.timeline.kernel
+
+
+def test_replay_other_channels_reprices_transfers():
+    system, rec = _traced_run("BFS", cfg=_cfg(n_channels=1))
+    res = trace.replay(rec.records, cfg=_cfg(n_channels=2))
+    assert res.timeline.h2d == pytest.approx(system.timeline.h2d / 2)
+
+
+def test_replay_frequency_rescales_kernels():
+    system, rec = _traced_run("BFS")
+    res = trace.replay(rec.records, cfg=_cfg(freq_mhz=700))
+    assert res.timeline.kernel == pytest.approx(
+        system.timeline.kernel * 350 / 700)
+    assert res.timeline.h2d == system.timeline.h2d
+
+
+def test_replay_rejects_unversioned_garbage():
+    with pytest.raises(ValueError, match="header"):
+        trace.replay([{"type": "cmd"}])
+    with pytest.raises(ValueError, match="version"):
+        trace.replay([{"type": "header", "version": 99}])
+
+
+# ---------------------------------------------------------------------------
+# events survive the round-trip (async stream dependencies)
+# ---------------------------------------------------------------------------
+
+
+def test_event_waits_rewired_across_queues():
+    system = PIMSystem(_cfg(), mode="async")
+    rec = trace.record(system)
+    with system.stream("a"):
+        system.h2d(4096.0)
+        ev = system.record_event("staged")
+    with system.stream("b"):
+        system.wait_event(ev)
+        system.modeled_launch("k", 1e-4)
+    system.sync()
+    res = trace.replay(rec.records)
+    # event dependency survived: overlapped makespan matches the live
+    # schedule (the launch cannot start before the cross-stream h2d ends)
+    assert res.timeline.elapsed == system.timeline.elapsed
+    assert res.n_commands == 4  # h2d, record, wait, launch
+
+
+# ---------------------------------------------------------------------------
+# obs report renders command traces
+# ---------------------------------------------------------------------------
+
+
+def test_obs_report_renders_command_trace(tmp_path, capsys):
+    from repro.obs import report as obs_report
+    _, rec = _traced_run("BFS")
+    path = tmp_path / "t.jsonl"
+    rec.save(path)
+    rc = obs_report.main([str(path), "--top", "3"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "command trace v1" in out
+    assert "phase breakdown" in out
+    assert "re-priceable" in out
+
+
+def test_recorder_detach_stops_recording():
+    system = PIMSystem(_cfg())
+    rec = trace.record(system)
+    system.h2d(1024.0)
+    system.recorder = None
+    system.h2d(1024.0)
+    cmds = [r for r in rec.records if r.get("type") == "cmd"]
+    assert len(cmds) == 1
+
+
+def test_trace_header_round_trips_config(tmp_path):
+    system, rec = _traced_run("BFS", cfg=_cfg(simt_width=4))
+    path = tmp_path / "t.jsonl"
+    rec.save(path)
+    records = trace.load(str(path))
+    assert DPUConfig(**records[0]["cfg"]) == system.cfg
+    assert json.loads(json.dumps(records[0]))  # plain JSON, no numpy leaks
