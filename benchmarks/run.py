@@ -31,7 +31,7 @@ import time
 
 #: suite families selectable via --suite (benches declare theirs inline)
 SUITE_NAMES = ("figs", "comm", "overlap", "lm", "faults", "cluster",
-               "pathfind")
+               "overload", "pathfind")
 
 
 def _emit(name: str, wall_s: float, rows):
@@ -69,7 +69,7 @@ def main() -> None:
         profile = obs.RunProfile(name=f"bench:{args.suite}")
 
     from benchmarks import cluster_load, comm_scaling, fault_tolerance, \
-        lm_roofline, overlap_scaling, pathfind_arch, pim_figs, \
+        lm_roofline, overlap_scaling, overload, pathfind_arch, pim_figs, \
         rank_overlap, trace_replay
 
     char = None
@@ -80,51 +80,67 @@ def main() -> None:
             char = pim_figs.characterize(args.scale)
         return char
 
-    # single registry: bench name -> (suite, thunk)
+    # single registry: bench name -> (suite, thunk, standalone caps) —
+    # caps are the flags the bench's OWN script supports when run
+    # directly (python benchmarks/<module>.py --smoke/--check), shown
+    # by --list so CI wiring is discoverable
     benches = {
-        "fig5_util": ("figs", lambda: pim_figs.fig5_utilization(need_char(), args.scale)),
-        "fig6_breakdown": ("figs", lambda: pim_figs.fig6_breakdown(need_char(), args.scale)),
-        "fig7_tlp_hist": ("figs", lambda: pim_figs.fig7_tlp_hist(need_char(), args.scale)),
-        "fig8_tlp_ts": ("figs", lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale)),
-        "fig9_instr_mix": ("figs", lambda: pim_figs.fig9_instr_mix(need_char(), args.scale)),
-        "fig10_scaling": ("figs", lambda: pim_figs.fig10_strong_scaling(args.scale)),
-        "comm_scaling": ("comm", lambda: comm_scaling.comm_strong_scaling(args.scale)),
-        "comm_micro": ("comm", lambda: comm_scaling.collective_microbench(args.scale)),
-        "overlap_scaling": ("overlap", lambda: overlap_scaling.overlap_strong_scaling(args.scale)),
-        "overlap_depth": ("overlap", lambda: overlap_scaling.overlap_depth_sweep(args.scale)),
-        "rank_overlap": ("overlap", lambda: rank_overlap.rank_overlap(args.scale)),
-        "rank_contention": ("overlap", lambda: rank_overlap.contention_sweep(args.scale)),
-        "rank_calibration": ("overlap", lambda: rank_overlap.contention_calibration(args.scale)),
-        "fig11_simt": ("figs", lambda: pim_figs.fig11_simt(args.scale)),
-        "fig12_ilp": ("figs", lambda: pim_figs.fig12_ilp(args.scale)),
-        "fig13_mram_bw": ("figs", lambda: pim_figs.fig13_mram_bw(args.scale)),
-        "fig15_cache": ("figs", lambda: pim_figs.fig15_cache_vs_scratchpad(args.scale)),
-        "mmu_overhead": ("figs", lambda: pim_figs.mmu_overhead(args.scale)),
-        "simulation_rate": ("figs", lambda: pim_figs.simulation_rate(args.scale)),
-        "lm_roofline": ("lm", lambda: lm_roofline.table(args.dryrun_dir)),
-        "fault_smoke": ("faults", lambda: [fault_tolerance.smoke()]),
+        "fig5_util": ("figs", lambda: pim_figs.fig5_utilization(need_char(), args.scale), ()),
+        "fig6_breakdown": ("figs", lambda: pim_figs.fig6_breakdown(need_char(), args.scale), ()),
+        "fig7_tlp_hist": ("figs", lambda: pim_figs.fig7_tlp_hist(need_char(), args.scale), ()),
+        "fig8_tlp_ts": ("figs", lambda: pim_figs.fig8_tlp_timeseries(need_char(), args.scale), ()),
+        "fig9_instr_mix": ("figs", lambda: pim_figs.fig9_instr_mix(need_char(), args.scale), ()),
+        "fig10_scaling": ("figs", lambda: pim_figs.fig10_strong_scaling(args.scale), ()),
+        "comm_scaling": ("comm", lambda: comm_scaling.comm_strong_scaling(args.scale), ()),
+        "comm_micro": ("comm", lambda: comm_scaling.collective_microbench(args.scale), ()),
+        "overlap_scaling": ("overlap", lambda: overlap_scaling.overlap_strong_scaling(args.scale), ()),
+        "overlap_depth": ("overlap", lambda: overlap_scaling.overlap_depth_sweep(args.scale), ()),
+        "rank_overlap": ("overlap", lambda: rank_overlap.rank_overlap(args.scale), ()),
+        "rank_contention": ("overlap", lambda: rank_overlap.contention_sweep(args.scale), ()),
+        "rank_calibration": ("overlap", lambda: rank_overlap.contention_calibration(args.scale), ()),
+        "fig11_simt": ("figs", lambda: pim_figs.fig11_simt(args.scale), ()),
+        "fig12_ilp": ("figs", lambda: pim_figs.fig12_ilp(args.scale), ()),
+        "fig13_mram_bw": ("figs", lambda: pim_figs.fig13_mram_bw(args.scale), ()),
+        "fig15_cache": ("figs", lambda: pim_figs.fig15_cache_vs_scratchpad(args.scale), ()),
+        "mmu_overhead": ("figs", lambda: pim_figs.mmu_overhead(args.scale), ()),
+        "simulation_rate": ("figs", lambda: pim_figs.simulation_rate(args.scale), ()),
+        "lm_roofline": ("lm", lambda: lm_roofline.table(args.dryrun_dir), ()),
+        "fault_smoke": ("faults", lambda: [fault_tolerance.smoke()],
+                        ("--smoke", "--check")),
         "fault_tolerance": ("faults", lambda: fault_tolerance.sweep(
-            args.scale, rates=[0.0, 0.02, 0.05], trials=2, launches=4)),
-        "cluster_smoke": ("cluster", lambda: [cluster_load.smoke()]),
+            args.scale, rates=[0.0, 0.02, 0.05], trials=2, launches=4),
+            ("--smoke", "--check")),
+        "cluster_smoke": ("cluster", lambda: [cluster_load.smoke()],
+                          ("--smoke", "--check")),
         "cluster_load": ("cluster", lambda: cluster_load.load_table(
-            args.scale)),
+            args.scale), ("--smoke", "--check")),
+        "overload_chaos": ("overload", lambda: overload.chaos_table(
+            args.scale), ("--smoke", "--check")),
+        "overload_hedge": ("overload", lambda: overload.hedge_rows(
+            args.scale), ("--smoke", "--check")),
+        "overload_resume": ("overload", lambda: [overload.smoke()],
+                            ("--smoke", "--check")),
         "pathfind_arch": ("pathfind", lambda: pathfind_arch.compare(
-            args.scale)),
+            args.scale), ()),
         "pathfind_replay_sweep": ("pathfind",
                                   lambda: pathfind_arch.replay_sweep(
-                                      args.scale)),
+                                      args.scale), ()),
         "trace_replay_smoke": ("pathfind", lambda: [trace_replay.smoke(
-            args.scale)]),
+            args.scale)], ("--check",)),
     }
-    bad = {k for k, (s, _) in benches.items() if s not in SUITE_NAMES}
+    bad = {k for k, (s, _, _) in benches.items() if s not in SUITE_NAMES}
     assert not bad, f"benches with unknown suite: {bad}"
     if args.list:
         for suite in SUITE_NAMES:
-            members = sorted(k for k, (s, _) in benches.items()
+            members = sorted(k for k, (s, _, _) in benches.items()
                              if s == suite)
-            print(f"{suite}: {', '.join(members)}")
+            print(f"{suite}:")
+            for name in members:
+                caps = benches[name][2]
+                suffix = f"  [{' '.join(caps)}]" if caps else ""
+                print(f"  {name}{suffix}")
         return
-    selected = {k: fn for k, (suite, fn) in benches.items()
+    selected = {k: fn for k, (suite, fn, _) in benches.items()
                 if args.suite in ("all", suite)}
     if args.only:
         selected = {k: v for k, v in selected.items() if args.only in k}

@@ -12,16 +12,18 @@ pluggable fault-aware placement, priority/preemption, and SLO metrics.
 """
 from repro.cluster.arrivals import (JOB_KINDS, JobSpec, TenantSpec,
                                     poisson_stream, save_trace,
-                                    trace_stream)
-from repro.cluster.metrics import (COMPLETED, FAILED, ClusterReport,
-                                   JobOutcome)
+                                    scale_rates, trace_stream)
+from repro.cluster.metrics import (COMPLETED, FAILED, REJECTED, SHED,
+                                   ClusterReport, JobOutcome)
 from repro.cluster.scheduler import (POLICIES, ClusterLease, JobProfile,
                                      JobStep, PimCluster, measure_profile,
-                                     synthetic_profiles)
+                                     synthetic_profiles, trace_profile,
+                                     trace_profiles)
 
 __all__ = [
     "JOB_KINDS", "JobSpec", "TenantSpec", "poisson_stream", "save_trace",
-    "trace_stream", "COMPLETED", "FAILED", "ClusterReport", "JobOutcome",
-    "POLICIES", "ClusterLease", "JobProfile", "JobStep", "PimCluster",
-    "measure_profile", "synthetic_profiles",
+    "scale_rates", "trace_stream", "COMPLETED", "FAILED", "REJECTED",
+    "SHED", "ClusterReport", "JobOutcome", "POLICIES", "ClusterLease",
+    "JobProfile", "JobStep", "PimCluster", "measure_profile",
+    "synthetic_profiles", "trace_profile", "trace_profiles",
 ]

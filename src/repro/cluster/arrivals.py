@@ -126,6 +126,18 @@ def poisson_stream(tenants: Sequence[TenantSpec], horizon: float,
             for i, (t, _, _, ten, kind, size) in enumerate(raw)]
 
 
+def scale_rates(tenants: Sequence[TenantSpec],
+                factor: float) -> List[TenantSpec]:
+    """Uniformly scale every tenant's arrival rate — the overload knob:
+    ``scale_rates(mix, 1.5)`` offers 1.5x the calibrated load with the
+    same kind/size/SLO structure (the chaos benchmark's x-axis)."""
+    if factor <= 0:
+        raise ValueError("rate factor must be positive")
+    import dataclasses
+    return [dataclasses.replace(t, rate_hz=t.rate_hz * factor)
+            for t in tenants]
+
+
 def save_trace(path: str, jobs: Sequence[JobSpec]) -> None:
     """Record a job stream as a JSONL trace (one job per line)."""
     with open(path, "w") as f:

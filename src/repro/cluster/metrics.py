@@ -20,7 +20,12 @@ Definitions:
   :meth:`repro.sched.scheduler.Schedule.goodput`;
 * **utilization** — a rank's occupied seconds over the run makespan;
 * **SLO attainment** — fraction of jobs finishing within their
-  ``slo_seconds`` (failed jobs count as missed).
+  ``slo_seconds`` (failed, rejected, and shed jobs count as missed);
+* **SLO goodput** — ideal seconds of jobs that completed *within SLO*
+  over actual seconds spent on all jobs.  Under overload this is the
+  honest score: classic goodput stays high while every completion is
+  hopelessly late, SLO goodput collapses with attainment — the metric
+  the admission/shedding chaos gate compares.
 """
 from __future__ import annotations
 
@@ -32,6 +37,8 @@ import numpy as np
 #: terminal job states
 COMPLETED = "completed"
 FAILED = "failed"
+REJECTED = "rejected"   # refused at the admission boundary (never queued)
+SHED = "shed"           # dropped by deadline shedding (SLO provably lost)
 
 
 @dataclass(frozen=True)
@@ -44,7 +51,7 @@ class JobOutcome:
     priority: int
     arrival: float
     slo_seconds: float
-    status: str                    # completed | failed
+    status: str                    # completed | failed | rejected | shed
     t_start: Optional[float]       # first placement (None: never placed)
     t_done: float                  # completion or failure time
     spent: float                   # actual seconds charged to the system
@@ -53,6 +60,10 @@ class JobOutcome:
     ranks: tuple = ()              # final placement
     reschedules: int = 0
     preemptions: int = 0
+    reason: str = ""               # terminal detail (fault kind, queue_full,
+                                   # rate_limited, deadline, ...)
+    hedges: int = 0                # speculative duplicates issued
+    hedge_wins: int = 0            # duplicates that finished first
 
     @property
     def latency(self) -> float:
@@ -103,6 +114,15 @@ class ClusterReport:
         useful = sum(o.useful for o in sel if o.status == COMPLETED)
         return useful / spent if spent > 0 else 1.0
 
+    def slo_goodput(self, tenant: Optional[str] = None) -> float:
+        """Ideal seconds of SLO-meeting completions / actual seconds
+        spent on *all* jobs — goodput that refuses credit for late
+        work (1.0 for an empty selection)."""
+        sel = self._of(tenant)
+        spent = sum(o.spent for o in sel)
+        useful = sum(o.useful for o in sel if o.slo_met)
+        return useful / spent if spent > 0 else 1.0
+
     def utilization(self, rank: Optional[int] = None) -> float:
         """One rank's busy fraction of the makespan (fleet mean when
         ``rank`` is None)."""
@@ -123,6 +143,10 @@ class ClusterReport:
             "jobs": len(sel),
             "completed": len(done),
             "failed": sum(1 for o in sel if o.status == FAILED),
+            "rejected": sum(1 for o in sel if o.status == REJECTED),
+            "shed": sum(1 for o in sel if o.status == SHED),
+            "hedges": sum(o.hedges for o in sel),
+            "hedge_wins": sum(o.hedge_wins for o in sel),
             "p50_latency": _pct(lats, 50),
             "p99_latency": _pct(lats, 99),
             "mean_queueing": (float(np.mean(queue)) if queue else 0.0),
@@ -130,6 +154,7 @@ class ClusterReport:
             "slo_attainment": (sum(o.slo_met for o in sel) / len(sel)
                                if sel else 1.0),
             "goodput": self.goodput(tenant),
+            "slo_goodput": self.slo_goodput(tenant),
             "reschedules": sum(o.reschedules for o in sel),
             "preemptions": sum(o.preemptions for o in sel),
         }
@@ -141,18 +166,21 @@ class ClusterReport:
         """Formatted per-tenant + fleet scorecard (benchmark output)."""
         rows = []
         hdr = (f"{'tenant':>12} {'jobs':>5} {'done':>5} {'fail':>5} "
+               f"{'rej':>4} {'shed':>4} "
                f"{'p50_ms':>8} {'p99_ms':>8} {'queue_ms':>9} "
-               f"{'slo':>6} {'goodput':>8}")
+               f"{'slo':>6} {'goodput':>8} {'slo_gp':>7}")
         rows.append(hdr)
         for name in self.tenants() + [None]:
             m = self.metrics(name)
             label = name if name is not None else "FLEET"
             rows.append(
                 f"{label:>12} {m['jobs']:>5d} {m['completed']:>5d} "
-                f"{m['failed']:>5d} {m['p50_latency'] * 1e3:>8.2f} "
+                f"{m['failed']:>5d} {m['rejected']:>4d} {m['shed']:>4d} "
+                f"{m['p50_latency'] * 1e3:>8.2f} "
                 f"{m['p99_latency'] * 1e3:>8.2f} "
                 f"{m['mean_queueing'] * 1e3:>9.2f} "
-                f"{m['slo_attainment']:>6.2f} {m['goodput']:>8.4f}")
+                f"{m['slo_attainment']:>6.2f} {m['goodput']:>8.4f} "
+                f"{m['slo_goodput']:>7.4f}")
         rows.append(f"{'':>12} makespan={self.makespan * 1e3:.2f}ms "
                     f"utilization={self.utilization():.2%} "
                     f"policy={self.policy}")

@@ -40,7 +40,7 @@ from repro.obs.tracer import PID_HOST, Tracer
 from repro.sched import queue as sq
 from repro.sched import scheduler as ssched
 
-PHASES = ("h2d", "kernel", "d2h", "inter_dpu", "retry")
+PHASES = ("h2d", "kernel", "d2h", "inter_dpu", "retry", "shed")
 
 
 def _xfer_spec(direction: str, bytes_per_dpu) -> Dict:
@@ -68,6 +68,7 @@ class Timeline:
     d2h: float = 0.0
     inter_dpu: float = 0.0  # inter-DPU exchanges between kernels
     retry: float = 0.0      # wasted attempts + backoff (fault recovery)
+    shed: float = 0.0       # speculative duplicates (hedged launches)
     #: per-event attribution: (phase, label, seconds, bytes)
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
     #: overlapped makespan from the repro.sched scheduler (None = not synced)
@@ -89,13 +90,16 @@ class Timeline:
 
     @property
     def total(self) -> float:
-        return self.h2d + self.kernel + self.d2h + self.inter_dpu + self.retry
+        return (self.h2d + self.kernel + self.d2h + self.inter_dpu
+                + self.retry + self.shed)
 
     @property
     def goodput(self) -> float:
-        """Useful fraction of the serialized busy time: 1 − retry/total
-        (1.0 when nothing was wasted, or nothing ran)."""
-        return 1.0 if self.total <= 0.0 else 1.0 - self.retry / self.total
+        """Useful fraction of the serialized busy time: 1 − (retry +
+        shed)/total (1.0 when nothing was wasted, or nothing ran) —
+        hedged duplicates are speculation overhead, like retries."""
+        return 1.0 if self.total <= 0.0 \
+            else 1.0 - (self.retry + self.shed) / self.total
 
     @property
     def end_to_end(self) -> float:
@@ -112,7 +116,7 @@ class Timeline:
         t = max(self.total, 1e-30)
         return {"kernel": self.kernel / t, "h2d": self.h2d / t,
                 "d2h": self.d2h / t, "inter_dpu": self.inter_dpu / t,
-                "retry": self.retry / t}
+                "retry": self.retry / t, "shed": self.shed / t}
 
     def by_label(self, phase: Optional[str] = None) -> Dict[str, float]:
         """Seconds per event label within one phase (e.g. per-collective),
@@ -227,12 +231,17 @@ class PIMSystem:
         """Charge the timeline (eager, serialized-order sums) and queue the
         command for the overlapped schedule.  ``meta`` is the re-pricing
         spec a :class:`repro.trace.TraceRecorder` stores with the command
-        (how its seconds were derived) — never read by the simulation."""
+        (how its seconds were derived) — never read by the simulation.
+        ``phase="shed"`` submissions (hedged duplicates) are marked fully
+        wasted: exactly one of the two copies is redundant by
+        construction, and the duplicate is the designated one, so
+        :meth:`Schedule.wasted` prices speculation like retries."""
         self._invalidate_schedule()
         self.timeline.add(phase, seconds, label, nbytes)
         cmd = self.runtime.submit(kind, label or phase, seconds,
                                   phase=phase, nbytes=nbytes,
-                                  resources=resources, attempt=attempt)
+                                  resources=resources, attempt=attempt,
+                                  wasted=seconds if phase == "shed" else 0.0)
         if self.recorder is not None:
             self.recorder.on_command(cmd, meta)
         return cmd
@@ -333,16 +342,22 @@ class PIMSystem:
         return sched
 
     # ---- transfer accounting -------------------------------------------------
-    def h2d(self, bytes_per_dpu, label: str = "h2d") -> "sq.Command":
-        """Host write; scalar or (D,) per-DPU byte vector."""
+    def h2d(self, bytes_per_dpu, label: str = "h2d",
+            phase: str = "h2d") -> "sq.Command":
+        """Host write; scalar or (D,) per-DPU byte vector.  ``phase``
+        overrides the timeline bucket (``"shed"`` for a hedged
+        duplicate); the transfer is priced and fault-streamed the same
+        either way."""
         ev = self.topology.schedule(bytes_per_dpu, "h2d")
-        return self._transfer(sq.H2D, "h2d", label, ev,
+        return self._transfer(sq.H2D, phase, label, ev,
                               spec=_xfer_spec("h2d", bytes_per_dpu))
 
-    def d2h(self, bytes_per_dpu, label: str = "d2h") -> "sq.Command":
-        """Host read; scalar or (D,) per-DPU byte vector."""
+    def d2h(self, bytes_per_dpu, label: str = "d2h",
+            phase: str = "d2h") -> "sq.Command":
+        """Host read; scalar or (D,) per-DPU byte vector (``phase`` as
+        in :meth:`h2d`)."""
         ev = self.topology.schedule(bytes_per_dpu, "d2h")
-        return self._transfer(sq.D2H, "d2h", label, ev,
+        return self._transfer(sq.D2H, phase, label, ev,
                               spec=_xfer_spec("d2h", bytes_per_dpu))
 
     def _transfer(self, kind: str, phase: str, label: str,
@@ -422,21 +437,21 @@ class PIMSystem:
                                "dpus": None})
 
     def _charge_kernel(self, name: str, seconds: float,
-                       ranks: Optional[Sequence[int]] = None
-                       ) -> "sq.Command":
+                       ranks: Optional[Sequence[int]] = None,
+                       phase: str = "kernel") -> "sq.Command":
         """Charge one successful kernel: hold the involved ranks' compute
         slots (no fault handling — the caller already resolved that)."""
         meta = {"price": "kernel", "freq_mhz": self.cfg.freq_mhz,
                 "ranks": None if ranks is None
                 else [int(r) for r in self._ranks_or_all(ranks)]}
         return self._submit(
-            sq.LAUNCH, "kernel", name, seconds, 0.0,
+            sq.LAUNCH, phase, name, seconds, 0.0,
             {f"rank{r}": seconds for r in self._ranks_or_all(ranks)},
             meta=meta)
 
     def modeled_launch(self, name: str, seconds: float,
-                       ranks: Optional[Sequence[int]] = None
-                       ) -> "sq.Command":
+                       ranks: Optional[Sequence[int]] = None,
+                       phase: str = "kernel") -> "sq.Command":
         """Charge a kernel of known duration without running the engine —
         for what-if schedule studies and tests.  Holds the compute slots
         of ``ranks`` (default: every rank), exactly like a real
@@ -447,9 +462,11 @@ class PIMSystem:
         launch whose ranks hold no live DPU raises
         :class:`DpuFaultError`, and transient faults are retried under
         the system's policy with the wasted attempts priced into the
-        ``retry`` phase."""
+        ``retry`` phase.  ``phase="shed"`` books a hedged duplicate:
+        same pricing, same fault stream, but the charge lands in the
+        timeline's speculation bucket."""
         if self.faults is None:
-            return self._charge_kernel(name, seconds, ranks)
+            return self._charge_kernel(name, seconds, ranks, phase=phase)
         launch_idx = self._launch_idx
         self._launch_idx += 1
         self._advance_permanents(name, launch_idx)
@@ -469,7 +486,7 @@ class PIMSystem:
                                                   self.cfg.n_dpus)
             faulted = [d for d in alive if t_mask[d]]
             if not faulted:
-                return self._submit(sq.LAUNCH, "kernel", name, seconds, 0.0,
+                return self._submit(sq.LAUNCH, phase, name, seconds, 0.0,
                                     rank_res, attempt=attempt)
             self._log_fault(FaultReport(
                 kind="transient", label=name, launch=launch_idx,

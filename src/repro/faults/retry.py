@@ -44,6 +44,24 @@ class RetryPolicy:
         """Backoff charged after failed attempt ``attempt`` (0-based)."""
         return self.backoff_seconds * (self.backoff_factor ** attempt)
 
+    def worst_case_seconds(self, ideal: float) -> float:
+        """Upper bound on what one command can cost under this policy
+        before it either succeeds or exhausts: ``max_attempts - 1``
+        failed tries (each clipped to ``timeout_seconds`` when set) plus
+        every backoff hold, plus one full-duration success.  This is the
+        straggler envelope a :class:`~repro.admission.HedgePolicy`
+        trigger should sit inside: a step that has been running longer
+        than its ideal price but less than this bound may still just be
+        retrying its way to success."""
+        if ideal < 0:
+            raise ValueError("ideal seconds must be >= 0")
+        failed_try = (ideal if self.timeout_seconds is None
+                      else min(ideal, self.timeout_seconds))
+        total = ideal
+        for attempt in range(self.max_attempts - 1):
+            total += failed_try + self.backoff_after(attempt)
+        return total
+
 
 #: no retries at all — every fault surfaces immediately (fail-stop)
 FAIL_FAST = RetryPolicy(max_attempts=1, backoff_seconds=0.0)

@@ -103,7 +103,8 @@ class RunProfile:
         for rep in system.reports:
             self.record_report(rep)
         tl = system.timeline
-        for phase in ("h2d", "kernel", "d2h", "inter_dpu", "retry"):
+        for phase in ("h2d", "kernel", "d2h", "inter_dpu", "retry",
+                      "shed"):
             sec = getattr(tl, phase)
             if sec:
                 self.phase_seconds[phase] = \
@@ -166,9 +167,10 @@ class RunProfile:
         if self.cluster:
             for tenant in sorted(self.cluster["tenants"]):
                 m = self.cluster["tenants"][tenant]
-                for k in ("jobs", "completed", "failed", "slo_attainment",
-                          "goodput", "p50_latency", "p99_latency"):
-                    out[f"cluster_{k}{{tenant={tenant}}}"] = m[k]
+                for k in ("jobs", "completed", "failed", "rejected",
+                          "shed", "hedges", "slo_attainment", "goodput",
+                          "slo_goodput", "p50_latency", "p99_latency"):
+                    out[f"cluster_{k}{{tenant={tenant}}}"] = m.get(k, 0.0)
             out["cluster_makespan_seconds"] = self.cluster["makespan"]
             out["cluster_utilization"] = self.cluster["utilization"]
         return out

@@ -17,7 +17,7 @@ Event schema — a stable contract (tests pin it):
   shares, the ``retry`` lane for resourceless backoff holds, cluster
   ``rank<r>`` occupancy lanes, ``tenant:<name>`` job lanes), ``phase``
   is the timeline phase (``h2d``/``kernel``/``d2h``/``inter_dpu``/
-  ``retry``), and ``seconds`` is the *modeled busy duration* the
+  ``retry``/``shed``), and ``seconds`` is the *modeled busy duration* the
   submitting layer charged — under a ``channel_contention`` stretch the
   scheduled wall slice ``end - start`` may exceed ``seconds``, and
   per-phase accounting always sums ``seconds`` (that is what matches
@@ -225,7 +225,8 @@ class Tracer:
                 continue
             sums = self.phase_sums(pid)
             tl = system.timeline
-            for phase in ("h2d", "kernel", "d2h", "inter_dpu", "retry"):
+            for phase in ("h2d", "kernel", "d2h", "inter_dpu", "retry",
+                          "shed"):
                 want = getattr(tl, phase)
                 got = sums.get(phase, 0.0)
                 if abs(want - got) > atol:

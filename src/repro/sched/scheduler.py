@@ -115,10 +115,12 @@ class Schedule:
 
     def wasted(self) -> float:
         """Scheduled seconds that produced nothing: failed attempts and
-        backoff holds re-enqueued by the fault runtime.  Each command's
-        waste is its scheduled duration scaled by its own wasted
-        fraction, so contention stretch inflates waste the same way it
-        inflates useful time."""
+        backoff holds re-enqueued by the fault runtime, plus hedged
+        duplicates (``phase="shed"`` speculation — exactly one of a
+        hedge pair is redundant, and the duplicate is marked fully
+        wasted at submit time).  Each command's waste is its scheduled
+        duration scaled by its own wasted fraction, so contention
+        stretch inflates waste the same way it inflates useful time."""
         total = 0.0
         for it in self.items:
             if it.cmd.wasted > 0.0 and it.cmd.seconds > 0.0:

@@ -5,6 +5,13 @@ prompts; the engine prefillss them into free slots (one jitted prefill per
 prompt shape bucket), then decodes the whole pool each tick — finished
 slots are refilled from the queue between ticks (continuous batching).
 Greedy sampling; per-slot stop conditions (eos or max tokens).
+
+Overload behavior is typed, not silent: ``submit`` raises
+:class:`~repro.admission.AdmissionRejected` for a request that can never
+fit the KV cache (``capacity``) or when the waiting queue is at its
+``max_queue`` bound (``queue_full``); a request carrying a ``deadline``
+(engine tick index) is shed from the queue once even an optimistic
+decode schedule would miss it (``stats["shed"]``, ``Request.shed``).
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.admission import AdmissionRejected
 from repro.models import transformer as T
 
 
@@ -27,6 +35,8 @@ class Request:
     eos: int = -1
     out: List[int] = field(default_factory=list)
     done: bool = False
+    deadline: Optional[int] = None   # engine tick to finish by
+    shed: bool = False               # dropped by deadline shedding
 
 
 class ServeEngine:
@@ -38,11 +48,14 @@ class ServeEngine:
     ``pim_ticks`` vs ``host_ticks``."""
 
     def __init__(self, cfg, params, *, batch: int = 4, capacity: int = 256,
-                 pim_pool=None):
+                 pim_pool=None, max_queue: Optional[int] = None):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.capacity = capacity
+        self.max_queue = max_queue
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * batch
         self.cache = T.init_cache(cfg, batch, capacity)
@@ -52,16 +65,57 @@ class ServeEngine:
             lambda p, c, t: T.decode_step(p, c, t, cfg), donate_argnums=(1,))
         self._next = 0
         self.pim_pool = pim_pool
-        self.stats = {"pim_ticks": 0, "host_ticks": 0}
+        self.stats = {"pim_ticks": 0, "host_ticks": 0, "shed": 0}
         self.requests: Dict[int, Request] = {}
+        self.ticks = 0
 
-    def submit(self, prompt, max_new: int = 16, eos: int = -1) -> int:
+    def submit(self, prompt, max_new: int = 16, eos: int = -1,
+               deadline: Optional[int] = None) -> int:
+        """Queue one prompt; returns its request id.
+
+        Raises :class:`AdmissionRejected` instead of accepting work the
+        engine cannot serve: ``capacity`` when ``len(prompt) + max_new``
+        exceeds the KV-cache budget (``capacity - 1`` positions — such a
+        request would previously be *silently truncated* at the cache
+        edge mid-decode), and ``queue_full`` when ``max_queue`` waiting
+        requests are already queued.  ``deadline`` (an engine tick
+        index) opts the request into deadline shedding."""
+        prompt = np.asarray(prompt, np.int32)
+        need = int(len(prompt)) + int(max_new)
+        if need > self.capacity - 1:
+            raise AdmissionRejected(
+                "request", "capacity",
+                detail=f"prompt {len(prompt)} + max_new {max_new} tokens "
+                       f"exceed the {self.capacity - 1}-position KV "
+                       "cache; lower max_new or raise capacity")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise AdmissionRejected(
+                "request", "queue_full",
+                detail=f"{len(self.queue)} requests already waiting "
+                       f"(max_queue={self.max_queue})")
         rid = self._next
         self._next += 1
-        req = Request(rid, np.asarray(prompt, np.int32), max_new, eos)
+        req = Request(rid, prompt, max_new, eos, deadline=deadline)
         self.requests[rid] = req
         self.queue.append(req)
         return rid
+
+    def _shed_expired(self):
+        """Drop queued requests whose deadline is provably lost: even if
+        decode started this tick and emitted one token per tick, the
+        request would finish after its deadline.  Requests already in
+        slots are never shed (their prefill is sunk cost — finishing is
+        cheaper than wasting it)."""
+        kept: deque = deque()
+        for r in self.queue:
+            if (r.deadline is not None
+                    and self.ticks + r.max_new > r.deadline):
+                r.done = True
+                r.shed = True
+                self.stats["shed"] += 1
+            else:
+                kept.append(r)
+        self.queue = kept
 
     # --- internals -----------------------------------------------------------
     def _prefill_into(self, slot: int, req: Request):
@@ -91,6 +145,8 @@ class ServeEngine:
 
     def step(self) -> int:
         """One engine tick; returns number of active requests."""
+        self.ticks += 1
+        self._shed_expired()
         for i in self._free_slots():
             if not self.queue:
                 break

@@ -81,3 +81,16 @@ class PimDecodePool:
         self.system.modeled_launch("decode", seconds, ranks=self.ranks)
         self.ticks += 1
         return seconds
+
+    def estimate(self, ticks: int = 1) -> float:
+        """Modeled seconds ``ticks`` decode steps would cost at the
+        pool's *current* health — no charge, no fault draw.  Returns
+        ``inf`` below the availability floor (the pool would refuse to
+        serve).  The serve engine's deadline shedding budgets with
+        this."""
+        if ticks < 0:
+            raise ValueError("ticks must be non-negative")
+        frac = self.healthy_fraction
+        if frac < self.min_fraction:
+            return float("inf")
+        return ticks * self.tick_seconds / frac

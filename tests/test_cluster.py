@@ -263,6 +263,27 @@ def test_lease_release_relocate():
         cluster.lease("svc", n_ranks=5)        # beyond capacity
 
 
+def test_lease_double_release_idempotent():
+    cluster = PimCluster(_sys(D=16, ranks=4, chans=2), policy="first_fit")
+    lease = cluster.lease("svc", n_ranks=2)
+    cluster.release(lease)
+    cluster.release(lease)                     # stale handle: no-op
+    wide = cluster.lease("svc", n_ranks=4)     # fleet intact, not over-freed
+    assert wide.ranks == (0, 1, 2, 3)
+
+
+def test_stale_release_cannot_free_reassigned_ranks():
+    from repro.faults.model import DpuFaultError
+    cluster = PimCluster(_sys(D=16, ranks=4, chans=2), policy="first_fit")
+    a = cluster.lease("a", n_ranks=2)
+    cluster.release(a)
+    b = cluster.lease("b", n_ranks=2)          # takes over a's ranks
+    cluster.release(a)                         # must not free b's ranks
+    with pytest.raises(DpuFaultError):
+        cluster.lease("c", n_ranks=3)          # only 2 ranks truly free
+    cluster.release(b)
+
+
 def test_pool_healthy_fraction_is_subset_scoped():
     # deaths OUTSIDE the pool's ranks must not degrade or floor it
     from repro.serve.pim_pool import PimDecodePool
